@@ -1,0 +1,39 @@
+"""Shared helpers for the paper-table benchmarks.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (us_per_call is
+the solver/simulator wall time where that is the measured quantity) plus a
+human-readable table, and returns a list of row dicts so ``run.py`` can
+aggregate everything into bench_output.txt and EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Iterable
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+@contextmanager
+def timed():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0
+    box["us"] = box["s"] * 1e6
+
+
+def fmt_table(headers: Iterable[str], rows: Iterable[Iterable[object]]) -> str:
+    headers = list(headers)
+    rows = [[str(c) for c in r] for r in rows]
+    widths = [
+        max([len(h)] + [len(r[i]) for r in rows if i < len(r)])
+        for i, h in enumerate(headers)
+    ]
+    out = ["  ".join(h.ljust(w) for h, w in zip(headers, widths))]
+    out.append("  ".join("-" * w for w in widths))
+    for r in rows:                      # rows may be ragged (triangular)
+        out.append("  ".join(c.ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)

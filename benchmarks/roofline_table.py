@@ -1,0 +1,50 @@
+"""Roofline report: reads dry-run artifacts and prints the per-cell terms.
+
+Consumes the JSON records written by ``repro.launch.dryrun`` (one per
+architecture × input shape × mesh) and reports the three roofline terms,
+the dominant bottleneck, and the MODEL_FLOPS / HLO_FLOPs usefulness ratio.
+Skips gracefully (with a note) when the dry-run has not been executed yet.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import emit, fmt_table
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
+DRYRUN_DIR = ARTIFACTS / "dryrun"
+
+
+def main() -> list[dict]:
+    if not DRYRUN_DIR.exists():
+        print("\n== Roofline: no dry-run artifacts yet "
+              "(run: PYTHONPATH=src python -m repro.launch.dryrun) ==")
+        emit("roofline.missing", 0.0, "run_dryrun_first")
+        return []
+    rows, out = [], []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if "roofline" not in rec:
+            continue
+        r = rec["roofline"]
+        rows.append(rec)
+        out.append([
+            rec["arch"], rec["shape"], rec["mesh"],
+            f"{r['t_compute_ms']:.2f}", f"{r['t_memory_ms']:.2f}",
+            f"{r['t_collective_ms']:.2f}", r["bottleneck"],
+            f"{r['model_flops_ratio']:.2f}",
+            f"{r['roofline_fraction']:.2f}",
+        ])
+        emit(f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']}",
+             r["t_dominant_ms"] * 1e3,
+             f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.3f}")
+    if out:
+        print("\n== Roofline terms per (arch x shape x mesh) ==")
+        print(fmt_table(["arch", "shape", "mesh", "compute ms", "memory ms",
+                         "collective ms", "bound", "useful", "frac"], out))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

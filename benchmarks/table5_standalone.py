@@ -1,0 +1,52 @@
+"""Table 5: standalone DNN runtimes on AGX Orin and Xavier AGX.
+
+Our calibrated profiles reproduce the published totals exactly (they are the
+calibration anchor); the benchmark verifies the round trip through layer
+grouping + the simulator, i.e. that a standalone simulated inference of every
+DNN equals the published number (no self-contention, no transitions).
+"""
+from __future__ import annotations
+
+from repro.core import api
+from repro.core.profiles import TABLE5, get_graph
+from repro.core.simulate import Workload, simulate
+
+from .common import emit, fmt_table, timed
+
+
+def main() -> list[dict]:
+    rows, out = [], []
+    worst = 0.0
+    with timed() as t:
+        for dnn in sorted(TABLE5):
+            row = {"dnn": dnn}
+            for plat_name, cols in (("agx-orin", (0, 1)),
+                                    ("xavier-agx", (2, 3))):
+                plat = api.resolve_platform(plat_name)
+                g = get_graph(dnn, plat)
+                model = api.default_model(plat)
+                for acc, col in zip(("GPU", "DLA"), cols):
+                    pub = TABLE5[dnn][col]
+                    if acc not in g.accelerators:
+                        row[f"{plat_name}.{acc}"] = None
+                        continue
+                    res = simulate(plat, [Workload(g, (acc,) * len(g))],
+                                   model)
+                    row[f"{plat_name}.{acc}"] = res.latency_ms
+                    if pub is not None:
+                        worst = max(worst, abs(res.latency_ms - pub) / pub)
+            rows.append(row)
+            out.append([dnn] + [
+                "-" if row.get(k) is None else f"{row[k]:.2f}"
+                for k in ("agx-orin.GPU", "agx-orin.DLA",
+                          "xavier-agx.GPU", "xavier-agx.DLA")])
+    print("\n== Table 5: standalone runtimes (ms), simulated ==")
+    print(fmt_table(["DNN", "Orin GPU", "Orin DLA", "Xavier GPU",
+                     "Xavier DLA"], out))
+    emit("table5.standalone_roundtrip", t["us"],
+         f"max_rel_err_vs_paper={worst:.2e}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Table 6: the paper's ten concurrent-DNN experiments across three SoCs.
+
+Each experiment runs every baseline plus HaX-CoNN under the exact contention
+simulator and reports latency / FPS and the improvement over the *best*
+baseline, side by side with the paper's published improvement.  Scenario
+semantics follow §5.2:
+
+  * scenario 2  — two DNNs on the same input, synchronized (concurrent).
+  * scenario 3  — streaming pipeline: DNN-2's iteration k consumes DNN-1's
+    iteration-k output (``depends_on``); several frames in flight.
+  * scenario 4  — a serial chain (DNN-a → DNN-b) concurrent with a third DNN.
+"""
+from __future__ import annotations
+
+from repro.core import api, solver_z3
+from repro.core.baselines import BASELINES
+from repro.core.profiles import chain, get_graph
+from repro.core.simulate import simulate
+
+from .common import emit, fmt_table, timed
+
+#: exp no -> (platform, objective, dnn spec, scenario, paper impr lat%, fps%)
+EXPERIMENTS = {
+    1: ("xavier-agx", "latency", ["vgg19", "resnet152"], 2, 23, 22),
+    2: ("xavier-agx", "latency", ["resnet152", "inception"], 2, 20, 18),
+    3: ("xavier-agx", "throughput", ["alexnet", "resnet101"], 3, 26, 23),
+    4: ("xavier-agx", "throughput", ["resnet101", "googlenet"], 3, 0, 0),
+    5: ("xavier-agx", "latency", [("googlenet", "resnet152"), "fcn-resnet18"],
+        4, 22, 21),
+    6: ("agx-orin", "latency", ["vgg19", "resnet152"], 2, 23, 22),
+    7: ("agx-orin", "throughput", ["googlenet", "resnet101"], 3, 19, 18),
+    8: ("agx-orin", "latency", [("resnet101", "googlenet"), "inception"],
+        4, 13, 12),
+    9: ("snapdragon-865", "throughput", ["googlenet", "resnet101"], 3, 11, 10),
+    10: ("snapdragon-865", "latency", ["inception", "resnet152"], 2, 15, 15),
+}
+
+PIPELINE_FRAMES = 4
+
+
+def build(plat, spec, scenario):
+    graphs, deps, its = [], [], []
+    for item in spec:
+        if isinstance(item, tuple):          # serial chain inside one slot
+            graphs.append(chain(*[get_graph(d, plat) for d in item]))
+        else:
+            graphs.append(get_graph(item, plat))
+        deps.append(None)
+        its.append(1)
+    if scenario == 3:                        # streaming: 1 -> 2 per frame
+        deps[1] = 0
+        its = [PIPELINE_FRAMES] * len(graphs)
+    return graphs, deps, its
+
+
+def run_experiment(no: int) -> dict:
+    plat_name, objective, spec, scenario, p_lat, p_fps = EXPERIMENTS[no]
+    plat = api.resolve_platform(plat_name)
+    model = api.default_model(plat)
+    graphs, deps, its = build(plat, spec, scenario)
+
+    base_rows = {}
+    for name, fn in BASELINES.items():
+        try:
+            wls = fn(plat, graphs, iterations=its, depends_on=deps)
+            res = simulate(plat, wls, model)
+            base_rows[name] = res
+        except (ValueError, KeyError):
+            base_rows[name] = None
+    with timed() as t:
+        sol = solver_z3.solve(plat, graphs, model, objective=objective,
+                              max_transitions=2, iterations=its,
+                              depends_on=deps, deadline_s=30.0)
+    usable = {k: v for k, v in base_rows.items() if v is not None}
+    best_name = min(usable, key=lambda k: usable[k].objective(objective))
+    best = usable[best_name]
+    lat_impr = 100 * (1 - sol.result.latency_ms / best.latency_ms)
+    fps_impr = 100 * (sol.result.throughput_fps / best.throughput_fps - 1)
+    return dict(
+        no=no, platform=plat_name, objective=objective, scenario=scenario,
+        dnns="+".join(str(s) for s in spec),
+        best_baseline=best_name,
+        base_lat=best.latency_ms, base_fps=best.throughput_fps,
+        hax_lat=sol.result.latency_ms, hax_fps=sol.result.throughput_fps,
+        lat_impr=lat_impr, fps_impr=fps_impr,
+        paper_lat_impr=p_lat, paper_fps_impr=p_fps,
+        optimal=sol.optimal, solver_s=t["s"],
+        assignments=[list(a) for a in sol.assignments],
+    )
+
+
+def main() -> list[dict]:
+    rows = []
+    out = []
+    for no in EXPERIMENTS:
+        r = run_experiment(no)
+        rows.append(r)
+        out.append([r["no"], r["platform"], r["objective"][:4], r["dnns"][:34],
+                    r["best_baseline"], f"{r['base_lat']:.2f}",
+                    f"{r['hax_lat']:.2f}", f"{r['lat_impr']:+.0f}%",
+                    f"{r['paper_lat_impr']}%", f"{r['fps_impr']:+.0f}%",
+                    f"{r['paper_fps_impr']}%",
+                    "opt" if r["optimal"] else "time",
+                    f"{r['solver_s']:.1f}s"])
+        emit(f"table6.exp{no}", r["solver_s"] * 1e6,
+             f"lat_impr={r['lat_impr']:.1f}%;paper={r['paper_lat_impr']}%;"
+             f"fps_impr={r['fps_impr']:.1f}%;paper_fps={r['paper_fps_impr']}%")
+    print("\n== Table 6: concurrent DNN scenarios vs best baseline ==")
+    print(fmt_table(
+        ["#", "platform", "obj", "DNNs", "best-base", "base lat",
+         "hax lat", "lat impr", "paper", "fps impr", "paper", "cert",
+         "solve"], out))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Table 8: exhaustive evaluation over every DNN pair on AGX Orin.
+
+All 45 unordered pairs of the 10-network evaluation set run concurrently with
+iteration balancing (§5.4: the faster DNN runs proportionally more iterations,
+as in multi-sensor systems sampling at different frequencies).  For each pair
+we report HaX-CoNN's throughput improvement over the best baseline, and check
+the paper's aggregate claims: improvement on most pairs (paper: 35/45),
+GPU-only correctly selected when layer-splitting cannot help (never-worse
+guarantee), VGG-19 rows mostly favouring GPU-only.
+"""
+from __future__ import annotations
+
+import itertools
+
+from repro.core import api, solver_bb
+from repro.core.baselines import BASELINES
+from repro.core.profiles import DNN_SET
+from repro.core.simulate import simulate
+
+from .common import emit, fmt_table, timed
+
+
+def balanced_iterations(plat, graphs) -> list[int]:
+    times = [min(g.standalone_time(a) for a in g.accelerators) for g in graphs]
+    slow = max(times)
+    return [max(1, round(slow / t)) for t in times]
+
+
+def run_pair(plat, model, a: str, b: str) -> dict:
+    graphs = api.resolve_graphs([a, b], plat)
+    its = balanced_iterations(plat, graphs)
+    base = {}
+    for name, fn in BASELINES.items():
+        try:
+            res = simulate(plat, fn(plat, graphs, iterations=its), model)
+            base[name] = res.throughput_fps
+        except (ValueError, KeyError):
+            pass
+    best_name = max(base, key=base.get)
+    sol = solver_bb.solve(plat, graphs, model, "throughput",
+                          max_transitions=1, iterations=its)
+    impr = sol.result.throughput_fps / base[best_name]
+    return dict(pair=(a, b), iters=its, best_baseline=best_name,
+                base_fps=base[best_name], hax_fps=sol.result.throughput_fps,
+                impr=impr,
+                hax_uses_dsa=any("DLA" in w.assignment
+                                 for w in sol.workloads))
+
+
+def main() -> list[dict]:
+    plat = api.resolve_platform("agx-orin")
+    model = api.default_model(plat)
+    rows = []
+    with timed() as t:
+        for a, b in itertools.combinations(DNN_SET, 2):
+            rows.append(run_pair(plat, model, a, b))
+    improved = sum(1 for r in rows if r["impr"] > 1.005)
+    never_worse = all(r["impr"] >= 1 - 1e-9 for r in rows)
+    vgg_rows = [r for r in rows if "vgg19" in r["pair"]]
+    vgg_improved = sum(1 for r in vgg_rows if r["impr"] > 1.005)
+
+    # lower-triangular improvement matrix, like the paper's Table 8
+    names = list(DNN_SET)
+    idx = {n: i for i, n in enumerate(names)}
+    cells = [["" for _ in names] for _ in names]
+    for r in rows:
+        i, j = sorted((idx[r["pair"][0]], idx[r["pair"][1]]), reverse=True)
+        mark = f"{r['impr']:.2f}" if r["impr"] > 1.005 else "x"
+        cells[i][j] = mark
+    out = [[names[i]] + cells[i][: i + 1] for i in range(len(names))]
+    print("\n== Table 8: HaX-CoNN/best-baseline throughput per pair (Orin) ==")
+    print(fmt_table(["DNN"] + [n[:9] for n in names], out))
+    print(f"pairs improved: {improved}/45 (paper: 35/45); never-worse: "
+          f"{never_worse}; VGG19 pairs improved: {vgg_improved}/9 "
+          f"(paper: 3/9)")
+    emit("table8.exhaustive_pairs", t["us"],
+         f"improved={improved}/45;paper=35/45;never_worse={never_worse};"
+         f"vgg19_improved={vgg_improved}/9")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

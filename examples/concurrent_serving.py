@@ -1,0 +1,80 @@
+"""End-to-end driver: concurrent batched serving of two LLMs, HaX-CoNN-
+scheduled (the paper's kind of workload — inference — as the assignment's
+end-to-end driver).
+
+Two reduced-config models (a dense llama-style LM and an RWKV-6 SSM) serve
+batched requests for real on CPU through the continuous-batching engine;
+the HaX-CoNN planner maps their layer groups onto the two virtual
+accelerators of a split pod and the predicted timeline is compared against
+every baseline.  Outputs are real tokens; timing is the simulated pod
+schedule (this container has no TPU).
+
+    PYTHONPATH=src python examples/concurrent_serving.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.configs.base import ShapeCell
+from repro.models import build
+from repro.serve.concurrent import plan_concurrent_serving
+from repro.serve.engine import ServingEngine
+
+
+def main():
+    print("=" * 70)
+    print("1) Plan: llama3.2-3b + rwkv6-7b co-served on a split v5e pod")
+    print("=" * 70)
+    cell = ShapeCell("serve_2k", 2048, 16, "decode")
+    plan = plan_concurrent_serving(
+        [configs.get("llama3.2-3b"), configs.get("rwkv6-7b")],
+        [cell, cell], objective="throughput", iterations=[4, 4],
+        deadline_s=10.0)
+    print(plan.summary())
+
+    print()
+    print("=" * 70)
+    print("2) Execute: batched requests through both engines (reduced "
+          "configs, real compute)")
+    print("=" * 70)
+    rng = np.random.default_rng(0)
+    engines = []
+    for arch in ("llama3.2-3b", "rwkv6-7b"):
+        cfg = configs.get(arch).reduced()
+        model = build(cfg, backend="xla")
+        params = model.init(jax.random.PRNGKey(hash(arch) % 2**31))
+        engines.append((arch, cfg, ServingEngine(model, params,
+                                                 max_slots=4, capacity=96)))
+    t0 = time.perf_counter()
+    reqs = {}
+    for arch, cfg, eng in engines:
+        reqs[arch] = [eng.submit(rng.integers(0, cfg.vocab, size=8),
+                                 max_new=12) for _ in range(6)]
+    # round-robin decode steps — both models advance "concurrently"
+    active = True
+    steps = 0
+    while active:
+        active = False
+        for _, _, eng in engines:
+            if eng.queue or eng.active:
+                eng.step()
+                active = True
+        steps += 1
+    wall = time.perf_counter() - t0
+    for arch, _, eng in engines:
+        done = eng.completed
+        print(f"  {arch:14s}: {len(done)} requests served, "
+              f"{sum(len(r.tokens) for r in done)} tokens, "
+              f"sample output: {done[0].tokens}")
+    print(f"  wall time (CPU, reduced configs): {wall:.2f}s over "
+          f"{steps} engine rounds")
+    print(f"  pod-schedule prediction: "
+          f"{plan.solution.result.throughput_fps:.1f} inferences/s, "
+          f"{100 * (plan.speedup_vs_best_baseline - 1):+.1f}% vs best "
+          f"baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's Fig. 1 case study in four lines of API.
+
+Runs VGG-19 + ResNet101 concurrently on the Xavier AGX profile and shows
+Case 1 (serial GPU), Case 2 (naive GPU&DLA), and Case 3 (HaX-CoNN optimal
+layer-level schedule), then the same planner applied to two LLMs co-served
+on a split TPU v5e pod.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import api
+
+
+def soc_case_study():
+    print("=" * 70)
+    print("Fig. 1 case study: VGG-19 + ResNet101 on NVIDIA Xavier AGX")
+    print("=" * 70)
+    rows = api.compare(["vgg19", "resnet101"], platform="xavier-agx",
+                       objective="latency", deadline_s=15.0)
+    for name in ("fastest_only", "naive_concurrent", "mensa", "herald",
+                 "h2h"):
+        res = rows[name]
+        if res is not None:
+            print(f"  {name:18s} latency={res.latency_ms:6.2f} ms   "
+                  f"fps={res.throughput_fps:6.1f}")
+    sol = rows["haxconn"]
+    print(f"  {'HaX-CoNN':18s} latency={sol.result.latency_ms:6.2f} ms   "
+          f"fps={sol.result.throughput_fps:6.1f}   "
+          f"(certified optimal: {sol.optimal})")
+    for wl in sol.workloads:
+        print(f"    {wl.graph.name:12s} -> {' '.join(wl.assignment)}")
+
+
+def pod_case_study():
+    print()
+    print("=" * 70)
+    print("Same planner, TPU pod: llama3.2-3b + qwen1.5-32b decode_32k "
+          "on a split v5e pod")
+    print("=" * 70)
+    from repro import configs
+    from repro.serve.concurrent import plan_concurrent_serving
+    plan = plan_concurrent_serving(
+        [configs.get("llama3.2-3b"), configs.get("qwen1.5-32b")],
+        ["decode_32k", "decode_32k"],
+        objective="latency", deadline_s=10.0)
+    print(plan.summary())
+
+
+if __name__ == "__main__":
+    soc_case_study()
+    pod_case_study()

@@ -1,0 +1,112 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m repro.analysis.report [--dir artifacts/dryrun]
+
+Prints markdown to stdout; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ARCH_ORDER = [
+    "recurrentgemma-9b", "rwkv6-7b", "internvl2-2b", "stablelm-1.6b",
+    "nemotron-4-15b", "qwen1.5-32b", "llama3.2-3b", "hubert-xlarge",
+    "dbrx-132b", "qwen3-moe-235b-a22b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_: pathlib.Path, mesh: str):
+    recs = {}
+    for f in dir_.glob(f"*_{mesh}.json"):
+        r = json.loads(f.read_text())
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_ms(x):
+    if x >= 1000:
+        return f"{x / 1e3:.2f}s"
+    return f"{x:.1f}ms"
+
+
+def roofline_table(recs) -> str:
+    out = ["| arch | shape | status | t_compute | t_memory | t_collective |"
+           " bound | useful (6ND/HLO) | frac | note |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                out.append(f"| {arch} | {shape} | MISSING | | | | | | | |")
+                continue
+            if r["status"] == "skip":
+                out.append(f"| {arch} | {shape} | SKIP | | | | | | | "
+                           f"{r['reason']} |")
+                continue
+            rl = r["roofline"]
+            out.append(
+                f"| {arch} | {shape} | ok | {fmt_ms(rl['t_compute_ms'])} "
+                f"| {fmt_ms(rl['t_memory_ms'])} "
+                f"| {fmt_ms(rl['t_collective_ms'])} | {rl['bottleneck']} "
+                f"| {rl['model_flops_ratio']:.2f} "
+                f"| {rl['roofline_fraction']:.3f} ({rl['useful_metric']}) "
+                f"| {rl['what_would_help'][:58]} |")
+    return "\n".join(out)
+
+
+def dryrun_table(recs, mesh) -> str:
+    out = [f"| arch | shape | compile | GB/chip (arg+tmp+out) | collectives |",
+           "|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None or r["status"] != "ok":
+                reason = "" if r is None else r.get("reason", "")
+                out.append(f"| {arch} | {shape} | {'SKIP' if r else 'MISSING'}"
+                           f" | | {reason} |")
+                continue
+            ops = r["roofline"]["collective_ops"]
+            opstr = " ".join(f"{k.split('-')[-1][:4]}:{v}"
+                             for k, v in sorted(ops.items()))
+            out.append(f"| {arch} | {shape} | {r['compile_s']:.1f}s "
+                       f"| {r['memory']['peak_estimate_gb']:.2f} | {opstr} |")
+    return "\n".join(out)
+
+
+def summary_stats(recs) -> str:
+    oks = [r for r in recs.values() if r["status"] == "ok"]
+    skips = [r for r in recs.values() if r["status"] == "skip"]
+    bounds = {}
+    for r in oks:
+        b = r["roofline"]["bottleneck"]
+        bounds[b] = bounds.get(b, 0) + 1
+    fr = sorted((r["roofline"]["roofline_fraction"],
+                 r["arch"], r["shape"]) for r in oks)
+    lines = [f"- cells compiled: {len(oks)}; skipped per assignment rules: "
+             f"{len(skips)}",
+             f"- bottleneck split: {bounds}",
+             f"- worst roofline fraction: {fr[0][0]:.3f} "
+             f"({fr[0][1]} × {fr[0][2]})",
+             f"- best roofline fraction: {fr[-1][0]:.3f} "
+             f"({fr[-1][1]} × {fr[-1][2]})"]
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(pathlib.Path(args.dir), args.mesh)
+    print(f"### Roofline ({args.mesh}-pod mesh)\n")
+    print(summary_stats(recs) + "\n")
+    print(roofline_table(recs) + "\n")
+    print(f"### Dry-run ({args.mesh}-pod mesh)\n")
+    print(dryrun_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

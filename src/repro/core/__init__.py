@@ -1,0 +1,21 @@
+"""HaX-CoNN core: contention-aware concurrent DNN scheduling.
+
+Reproduces "Shared Memory-contention-aware Concurrent DNN Execution for
+Diversely Heterogeneous System-on-Chips" (Dagli & Belviranli, 2023) and
+generalizes it to TPU-pod virtual accelerators.
+"""
+from .accelerators import PLATFORMS, Accelerator, Platform
+from .contention import (PiecewiseModel, ProportionalShareModel,
+                         estimate_blackbox_demand, pccs_from_pairs)
+from .graph import DNNGraph, LayerGroup
+from .simulate import Interval, SimResult, Workload, simulate
+from .solver_bb import Solution
+
+__all__ = [
+    "PLATFORMS", "Accelerator", "Platform",
+    "PiecewiseModel", "ProportionalShareModel",
+    "estimate_blackbox_demand", "pccs_from_pairs",
+    "DNNGraph", "LayerGroup",
+    "Interval", "SimResult", "Workload", "simulate",
+    "Solution",
+]

@@ -1,0 +1,107 @@
+"""High-level facade: one call from (DNNs, platform, objective) to a schedule.
+
+    from repro.core import api
+    sol = api.schedule(["vgg19", "resnet152"], platform="xavier-agx",
+                       objective="latency")
+    print(sol.assignments, sol.result.latency_ms)
+
+Accepts either paper-profile DNN names or pre-built :class:`DNNGraph`s (e.g.
+exported from a JAX model via :mod:`repro.models.graph_export`).
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+from . import baselines as _baselines
+from . import solver_z3
+from .accelerators import PLATFORMS, Platform
+from .contention import ContentionModel, ProportionalShareModel
+from .graph import DNNGraph
+from .profiles import get_graph
+from .simulate import SimResult, Workload, simulate
+from .solver_bb import Solution
+
+#: calibrated default for the SoC EMC domains — reproduces the paper's
+#: observed co-run slowdown magnitudes (up to ~70% performance loss, §5.2)
+#: at the Table-2 demand levels.
+DEFAULT_SOC_MODEL = ProportionalShareModel(capacity=1.0, sensitivity=3.0)
+#: ICI over-subscription is served fairly by the fabric; no extra sensitivity.
+DEFAULT_POD_MODEL = ProportionalShareModel(capacity=1.0, sensitivity=1.0)
+
+
+def resolve_platform(platform: str | Platform) -> Platform:
+    if isinstance(platform, Platform):
+        return platform
+    return PLATFORMS[platform]()
+
+
+def default_model(platform: Platform) -> ContentionModel:
+    return DEFAULT_POD_MODEL if "ICI" in platform.domains else DEFAULT_SOC_MODEL
+
+
+def resolve_graphs(dnns: Sequence[str | DNNGraph],
+                   platform: Platform) -> list[DNNGraph]:
+    return [d if isinstance(d, DNNGraph) else get_graph(d, platform)
+            for d in dnns]
+
+
+def schedule(
+    dnns: Sequence[str | DNNGraph],
+    platform: str | Platform = "agx-orin",
+    objective: str = "latency",
+    model: ContentionModel | None = None,
+    max_transitions: int | None = 3,
+    iterations: Sequence[int] | None = None,
+    depends_on: Sequence[int | None] | None = None,
+    deadline_s: float | None = None,
+) -> Solution:
+    """HaX-CoNN optimal contention-aware schedule (CEGAR + exact simulator)."""
+    plat = resolve_platform(platform)
+    graphs = resolve_graphs(dnns, plat)
+    m = model or default_model(plat)
+    return solver_z3.solve(plat, graphs, m, objective=objective,
+                           max_transitions=max_transitions,
+                           iterations=iterations, depends_on=depends_on,
+                           deadline_s=deadline_s)
+
+
+def evaluate_baseline(
+    name: str,
+    dnns: Sequence[str | DNNGraph],
+    platform: str | Platform = "agx-orin",
+    model: ContentionModel | None = None,
+    iterations: Sequence[int] | None = None,
+    depends_on: Sequence[int | None] | None = None,
+) -> tuple[list[Workload], SimResult]:
+    """Evaluate one named baseline under the exact contention simulator."""
+    plat = resolve_platform(platform)
+    graphs = resolve_graphs(dnns, plat)
+    m = model or default_model(plat)
+    wls = _baselines.BASELINES[name](plat, graphs, iterations=iterations,
+                                     depends_on=depends_on)
+    return wls, simulate(plat, wls, m)
+
+
+def compare(
+    dnns: Sequence[str | DNNGraph],
+    platform: str | Platform = "agx-orin",
+    objective: str = "latency",
+    model: ContentionModel | None = None,
+    iterations: Sequence[int] | None = None,
+    depends_on: Sequence[int | None] | None = None,
+    deadline_s: float | None = 20.0,
+) -> dict[str, object]:
+    """HaX-CoNN vs. every baseline — the shape of the paper's Table 6 rows."""
+    plat = resolve_platform(platform)
+    rows: dict[str, object] = {}
+    for name in _baselines.BASELINES:
+        try:
+            _, res = evaluate_baseline(name, dnns, plat, model,
+                                       iterations, depends_on)
+            rows[name] = res
+        except (ValueError, KeyError):
+            rows[name] = None
+    sol = schedule(dnns, plat, objective, model, iterations=iterations,
+                   depends_on=depends_on, deadline_s=deadline_s)
+    rows["haxconn"] = sol
+    return rows

@@ -1,0 +1,125 @@
+"""D-HaX-CoNN: dynamic runtime adaptation of optimal schedule generation (§5.3).
+
+Autonomous workload CFGs change at runtime (mode switches, new DNN sets).
+Stalling for seconds while Z3 re-solves is not acceptable, so D-HaX-CoNN:
+
+  1. starts from the best *naive* schedule (not Herald/H2H — they themselves
+     take seconds, see the paper's footnote),
+  2. runs the CEGAR solver in bounded wall-clock slices, replacing the live
+     schedule whenever a better one is found,
+  3. converges to (and certifies) the optimal schedule as the loop keeps
+     running.
+
+The solver state is kept warm across :meth:`step` calls — blocking clauses
+and bound cuts persist, matching Z3's incremental model-based quantifier
+instantiation behaviour described in the paper.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+try:
+    import z3
+    HAVE_Z3 = True
+except ImportError:  # pragma: no cover
+    HAVE_Z3 = False
+
+from .accelerators import Platform
+from .contention import ContentionModel
+from .graph import DNNGraph
+from .simulate import Workload, simulate
+from .solver_bb import Solution
+from .solver_z3 import _EPS, _Encoding, _incumbent
+
+
+@dataclass
+class ImprovementEvent:
+    solver_time_s: float
+    objective: float
+    assignments: list[tuple[str, ...]]
+
+
+@dataclass
+class DHaXCoNN:
+    """Anytime scheduler for one workload CFG."""
+
+    platform: Platform
+    graphs: Sequence[DNNGraph]
+    model: ContentionModel | Mapping[str, ContentionModel]
+    objective: str = "latency"
+    max_transitions: int | None = 3
+    iterations: Sequence[int] | None = None
+    depends_on: Sequence[int | None] | None = None
+
+    best: Solution = field(init=False)
+    converged: bool = field(init=False, default=False)
+    solver_time_s: float = field(init=False, default=0.0)
+    history: list[ImprovementEvent] = field(init=False)
+    evaluated: int = field(init=False, default=0)
+
+    def __post_init__(self):
+        self._its = list(self.iterations or [1] * len(self.graphs))
+        self._deps = list(self.depends_on or [None] * len(self.graphs))
+        self.best = _incumbent(self.platform, self.graphs, self.model,
+                               self.objective, self._its, self._deps)
+        self.history = [ImprovementEvent(0.0, self.best.objective,
+                                         self.best.assignments)]
+        if HAVE_Z3:
+            self._enc = _Encoding(self.platform, self.graphs, self._its,
+                                  self.max_transitions, self._deps)
+        else:  # degrade to a one-shot exhaustive fallback on first step
+            self._enc = None
+
+    # ------------------------------------------------------------------
+    def step(self, budget_s: float) -> Solution:
+        """Run the solver for at most ``budget_s`` seconds; return best."""
+        if self.converged:
+            return self.best
+        t_end = time.perf_counter() + budget_s
+        if self._enc is None:
+            from . import solver_bb
+            self.best = solver_bb.solve(
+                self.platform, self.graphs, self.model, self.objective,
+                self.max_transitions or 3, self._its, self._deps)
+            self.converged = True
+            return self.best
+        enc = self._enc
+        while True:
+            now = time.perf_counter()
+            if now >= t_end:
+                break
+            enc.s.push()
+            enc.s.add(enc.bound_constraint(self.objective,
+                                           self.best.objective))
+            enc.s.set("timeout", max(1, int((t_end - now) * 1000)))
+            r = enc.s.check()
+            m = enc.s.model() if r == z3.sat else None
+            enc.s.pop()
+            self.solver_time_s += time.perf_counter() - now
+            if r == z3.unsat:
+                self.converged = True
+                self.best.optimal = True
+                break
+            if r != z3.sat:
+                break  # slice exhausted mid-search
+            asgs = enc.extract(m)
+            enc.block(asgs)
+            wls = [Workload(g, a, iterations=it, depends_on=dep)
+                   for g, a, it, dep in
+                   zip(self.graphs, asgs, self._its, self._deps)]
+            res = simulate(self.platform, wls, self.model,
+                           record_timeline=False)
+            self.evaluated += 1
+            obj = res.objective(self.objective)
+            if obj < self.best.objective - _EPS:
+                self.best = Solution(wls, res, obj, self.objective,
+                                     self.evaluated, False)
+                self.history.append(ImprovementEvent(
+                    self.solver_time_s, obj, self.best.assignments))
+        return self.best
+
+    # ------------------------------------------------------------------
+    def current_workloads(self) -> list[Workload]:
+        return self.best.workloads

@@ -1,0 +1,136 @@
+"""Exact branch-and-bound / exhaustive solver (pure Python, no z3).
+
+Used as the optimality *oracle* in tests and as the fallback when z3 is not
+installed.  Enumerates per-DNN assignments with a bounded number of
+inter-accelerator transitions (``max_transitions``; the paper's optimal
+schedules in Table 6 all use exactly one transition per DNN, and
+``max_transitions=len(graph)`` recovers the full space), prunes joint
+combinations with an admissible contention-free lower bound, and evaluates
+survivors with the exact simulator.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Mapping, Sequence
+
+from .accelerators import Platform
+from .contention import ContentionModel
+from .graph import DNNGraph
+from .simulate import SimResult, Workload, simulate
+
+
+@dataclass
+class Solution:
+    workloads: list[Workload]
+    result: SimResult
+    objective: float
+    kind: str
+    evaluated: int
+    optimal: bool
+
+    @property
+    def assignments(self) -> list[tuple[str, ...]]:
+        return [w.assignment for w in self.workloads]
+
+
+def enumerate_assignments(
+    graph: DNNGraph, accs: Sequence[str], max_transitions: int
+) -> list[tuple[str, ...]]:
+    """All legal assignments of ``graph`` with <= ``max_transitions``."""
+    accs = [a for a in accs if a in graph.accelerators]
+    n = len(graph)
+    legal_after = [graph[i].can_transition_after for i in range(n)]
+    out: list[tuple[str, ...]] = []
+
+    def rec(i: int, cur: list[str], trans: int):
+        if i == n:
+            out.append(tuple(cur))
+            return
+        for a in accs:
+            if i > 0 and a != cur[-1]:
+                if trans >= max_transitions or not legal_after[i - 1]:
+                    continue
+                cur.append(a)
+                rec(i + 1, cur, trans + 1)
+            else:
+                cur.append(a)
+                rec(i + 1, cur, trans)
+            cur.pop()
+
+    rec(0, [], 0)
+    return out
+
+
+def lower_bound_time(platform: Platform, graph: DNNGraph,
+                     assignment: Sequence[str]) -> float:
+    """Contention- and queueing-free completion time (admissible)."""
+    t = sum(graph[i].time_on(a) for i, a in enumerate(assignment))
+    for i in range(len(assignment) - 1):
+        if assignment[i] != assignment[i + 1]:
+            t += platform.transition_cost_ms(graph[i].out_bytes,
+                                             assignment[i], assignment[i + 1])
+    return t
+
+
+def joint_lower_bound(platform: Platform, graphs: Sequence[DNNGraph],
+                      assignments: Sequence[Sequence[str]],
+                      iterations: Sequence[int]) -> float:
+    """Admissible makespan LB: max of per-DNN path bounds and per-acc load."""
+    per_dnn = [
+        lower_bound_time(platform, g, a) * it
+        for g, a, it in zip(graphs, assignments, iterations)
+    ]
+    load: dict[str, float] = {a: 0.0 for a in platform.names}
+    for g, asg, it in zip(graphs, assignments, iterations):
+        for i, a in enumerate(asg):
+            load[a] += g[i].time_on(a) * it
+    return max(max(per_dnn), max(load.values()))
+
+
+def solve(
+    platform: Platform,
+    graphs: Sequence[DNNGraph],
+    model: ContentionModel | Mapping[str, ContentionModel],
+    objective: str = "latency",
+    max_transitions: int = 2,
+    iterations: Sequence[int] | None = None,
+    depends_on: Sequence[int | None] | None = None,
+    max_candidates: int = 2_000_000,
+) -> Solution:
+    its = list(iterations or [1] * len(graphs))
+    deps = list(depends_on or [None] * len(graphs))
+    cand = [enumerate_assignments(g, platform.names, max_transitions)
+            for g in graphs]
+    total = 1
+    for c in cand:
+        total *= len(c)
+    if total > max_candidates:
+        raise ValueError(
+            f"search space {total} too large for exhaustive solve; "
+            f"reduce max_transitions or merge layer groups"
+        )
+
+    # Order joint candidates by lower bound so the incumbent tightens fast.
+    best: Solution | None = None
+    evaluated = 0
+    combos = sorted(
+        itertools.product(*cand),
+        key=lambda asgs: joint_lower_bound(platform, graphs, asgs, its),
+    )
+    for asgs in combos:
+        lb = joint_lower_bound(platform, graphs, asgs, its)
+        if best is not None and objective in ("latency", "throughput"):
+            # both objectives are monotone in makespan; lb bounds makespan.
+            if lb >= best.result.makespan - 1e-12:
+                break  # sorted by LB: nothing later can win
+        wls = [Workload(g, tuple(a), iterations=it, depends_on=dep)
+               for g, a, it, dep in zip(graphs, asgs, its, deps)]
+        res = simulate(platform, wls, model, record_timeline=False)
+        evaluated += 1
+        obj = res.objective(objective)
+        if best is None or obj < best.objective:
+            best = Solution(wls, res, obj, objective, evaluated, optimal=True)
+    assert best is not None
+    best.evaluated = evaluated
+    return best

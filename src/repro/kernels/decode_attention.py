@@ -1,0 +1,91 @@
+"""Single-token GQA decode attention over a KV cache (Pallas TPU kernel).
+
+One query token per sequence attends over a long cache with per-sequence
+valid lengths.  Grid = (batch, q_heads, kv_tiles); the kv tile axis is
+innermost/sequential with the online-softmax state in VMEM scratch, so HBM
+traffic is exactly one read of the live cache region per head — the memory
+roofline for decode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_kv: int):
+    ikv = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+    b = pl.program_id(0)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    k_pos = ikv * block_kv + jax.lax.iota(jnp.int32, block_kv)
+
+    @pl.when(ikv * block_kv < length)
+    def _tile():
+        q = q_ref[0, 0, 0, :].astype(jnp.float32) * scale        # (d,)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)                # (bkv, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)                # (bkv, dv)
+        valid = k_pos < length
+        k = jnp.where(valid[:, None], k, 0.0)    # 0*NaN guard (padding)
+        v = jnp.where(valid[:, None], v, 0.0)
+        s = k @ q                                                # (bkv,)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[0] = l_scr[0] * alpha + p.sum()
+        acc_scr[...] = acc_scr[...] * alpha + p @ v
+        m_scr[0] = m_new
+
+    @pl.when(ikv == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0, 0, :] = (acc_scr[...] /
+                             jnp.maximum(l_scr[0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_kv: int = 512,
+                     interpret: bool = False):
+    """q: (B, 1, Hq, D); caches: (B, S, Hkv, D); lengths: (B,) int32."""
+    b, sq, hq, d = q.shape
+    assert sq == 1, "decode kernel: one query token"
+    _, skv, hkv, dv = v_cache.shape
+    group = hq // hkv
+    block_kv = min(block_kv, skv)
+    scale = 1.0 / (d ** 0.5)
+    grid = (b, hq, pl.cdiv(skv, block_kv))
+    kernel = functools.partial(_kernel, scale=scale, block_kv=block_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),   # lengths, read via ref[b]
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h, ikv: (b_, 0, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda b_, h, ikv, g=group: (b_, ikv, h // g, 0)),
+            pl.BlockSpec((1, block_kv, 1, dv),
+                         lambda b_, h, ikv, g=group: (b_, ikv, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dv), lambda b_, h, ikv: (b_, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1, hq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((dv,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)

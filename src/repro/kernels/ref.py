@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracles for every kernel.
+
+These are the semantic ground truth: naive, O(S^2)-memory where applicable,
+no blocking, no numerics tricks beyond float32 softmax.  Kernel tests sweep
+shapes/dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _gqa_expand(k, n_heads):
+    """(B,S,Hkv,D) -> (B,S,Hq,D) by repeating kv heads."""
+    b, s, hkv, d = k.shape
+    rep = n_heads // hkv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              lengths=None):
+    """Reference attention.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, Dk/Dv).  GQA via head repetition.
+    ``window``: local attention — position i attends to [i-window+1, i]
+    (combined with causal).  ``lengths``: (B,) valid kv lengths (decode).
+    For Sq < Skv the queries are the *last* Sq positions (decode offset).
+    """
+    b, sq, hq, d = q.shape
+    skv = k.shape[1]
+    k = _gqa_expand(k, hq)
+    v = _gqa_expand(v, hq)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    q_pos = jnp.arange(sq) + (skv - sq)         # absolute query positions
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    mask = jnp.broadcast_to(mask[None, None], logits.shape)
+    if lengths is not None:
+        valid = k_pos[None, :] < lengths[:, None]          # (B, Skv)
+        mask &= valid[:, None, None, :]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jnp.nan_to_num(jnp.exp(logits - logits.max(-1, keepdims=True)))
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def linear_scan(a, b, h0=None):
+    """Reference gated linear recurrence: h_t = a_t * h_{t-1} + b_t.
+
+    a, b: (B, S, D); h0: (B, D) or None (zeros).  Returns (h_all, h_last).
+    Sequential python loop over S — the oracle for rglru.
+    """
+    B, S, D = a.shape
+    h = jnp.zeros((B, D), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    hs = []
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    for t in range(S):
+        h = af[:, t] * h + bf[:, t]
+        hs.append(h)
+    h_all = jnp.stack(hs, axis=1).astype(a.dtype)
+    return h_all, h
+
+
+def rwkv6(r, k, v, w, u, state0=None):
+    """Reference RWKV-6 (Finch) recurrence.
+
+    Per head with state S in R^{D x Dv}:
+        y_t = (S_{t-1} + (u ⊙ k_t) v_t^T)^T r_t
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    r, k, w: (B, T, H, D); v: (B, T, H, Dv); u: (H, D);
+    state0: (B, H, D, Dv).  Returns (y (B,T,H,Dv), state (B,H,D,Dv)).
+    ``w`` is the per-step decay in (0, 1) (already exp(-exp(...))-activated).
+    """
+    B, T, H, D = r.shape
+    Dv = v.shape[-1]
+    f32 = jnp.float32
+    S = (jnp.zeros((B, H, D, Dv), f32) if state0 is None
+         else state0.astype(f32))
+    ys = []
+    rf, kf, vf, wf = (x.astype(f32) for x in (r, k, v, w))
+    uf = u.astype(f32)
+    for t in range(T):
+        kt = kf[:, t]                     # (B,H,D)
+        vt = vf[:, t]                     # (B,H,Dv)
+        rt = rf[:, t]
+        wt = wf[:, t]
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        y = jnp.einsum("bhd,bhde->bhe", rt, S + uf[None] [..., None] * kv)
+        S = wt[..., None] * S + kv
+        ys.append(y)
+    y_all = jnp.stack(ys, axis=1).astype(v.dtype)
+    return y_all, S

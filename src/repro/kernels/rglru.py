@@ -1,0 +1,85 @@
+"""Gated linear recurrence (RG-LRU core) as a Pallas TPU kernel.
+
+Computes ``h_t = a_t * h_{t-1} + b_t`` over the time axis with the carry in
+VMEM scratch.  Grid = (batch, channel_tiles, time_tiles); time is innermost
+(sequential), channels are vectorized across the VPU lanes (tile = 128·k
+channels), and each time tile is walked with an in-kernel fori_loop.  This is
+the TPU-native shape of the RG-LRU: the recurrence is memory-bound and
+element-wise, so lane-parallel channels + sequential time maximize VPU
+utilization without any MXU involvement.
+
+The same primitive serves recurrentgemma's RG-LRU (a, b precomputed from the
+recurrence/input gates) and any diagonal SSM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, h_ref, hlast_ref, carry, *,
+            block_t: int, seq_len: int):
+    it = pl.program_id(2)
+    n_t = pl.num_programs(2)
+
+    @pl.when(it == 0)
+    def _init():
+        carry[...] = h0_ref[0, :].astype(jnp.float32)
+
+    def body(t, h):
+        # steps past seq_len are tile padding: keep h (NaN-poison guard)
+        valid = it * block_t + t < seq_len
+        h_new = jnp.where(
+            valid,
+            a_ref[0, t, :].astype(jnp.float32) * h
+            + b_ref[0, t, :].astype(jnp.float32),
+            h)
+        h_ref[0, t, :] = h_new.astype(h_ref.dtype)
+        return h_new
+
+    carry[...] = jax.lax.fori_loop(0, block_t, body, carry[...])
+
+    @pl.when(it == n_t - 1)
+    def _finalize():
+        hlast_ref[0, :] = carry[...].astype(hlast_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "block_d", "interpret"))
+def rglru_scan(a, b, h0=None, *, block_t: int = 256, block_d: int = 256,
+               interpret: bool = False):
+    """a, b: (B, S, D); h0: (B, D) -> (h_all (B,S,D), h_last (B,D))."""
+    B, S, D = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), a.dtype)
+    block_t = min(block_t, S)
+    block_d = min(block_d, D)
+    grid = (B, pl.cdiv(D, block_d), pl.cdiv(S, block_t))
+    kernel = functools.partial(_kernel, block_t=block_t, seq_len=S)
+    h_all, h_last = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_d),
+                         lambda b_, id_, it: (b_, it, id_)),
+            pl.BlockSpec((1, block_t, block_d),
+                         lambda b_, id_, it: (b_, it, id_)),
+            pl.BlockSpec((1, block_d), lambda b_, id_, it: (b_, id_)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, block_d),
+                         lambda b_, id_, it: (b_, it, id_)),
+            pl.BlockSpec((1, block_d), lambda b_, id_, it: (b_, id_)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), a.dtype),
+            jax.ShapeDtypeStruct((B, D), a.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return h_all, h_last

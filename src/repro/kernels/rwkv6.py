@@ -1,0 +1,90 @@
+"""RWKV-6 (Finch) time-mix recurrence as a Pallas TPU kernel.
+
+Per head h with matrix state S in R^{DxDv}:
+
+    y_t = r_t^T (S_{t-1} + (u ⊙ k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (w_t: data-dependent decay)
+
+Grid = (batch, heads, time_tiles); the (D, Dv) state lives in VMEM scratch
+across the sequential time-tile axis, and each tile walks its steps with a
+fori_loop of rank-1 updates (outer products on the VPU — D=64 keeps the
+state at 16 KiB, far under VMEM).  This is the TPU-native adaptation of the
+CUDA wkv kernels: channels-per-head map to lanes, the head axis to the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+            state, *, block_t: int, seq_len: int):
+    it = pl.program_id(2)
+    n_t = pl.num_programs(2)
+
+    @pl.when(it == 0)
+    def _init():
+        state[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)                        # (D,)
+
+    def body(t, S):
+        r = r_ref[0, t, 0, :].astype(jnp.float32)           # (D,)
+        k = k_ref[0, t, 0, :].astype(jnp.float32)           # (D,)
+        v = v_ref[0, t, 0, :].astype(jnp.float32)           # (Dv,)
+        w = w_ref[0, t, 0, :].astype(jnp.float32)           # (D,)
+        kv = k[:, None] * v[None, :]                        # (D, Dv)
+        y = ((S + u[:, None] * kv) * r[:, None]).sum(axis=0)
+        y_ref[0, t, 0, :] = y.astype(y_ref.dtype)
+        # steps past seq_len are tile padding: keep state unchanged
+        valid = it * block_t + t < seq_len
+        return jnp.where(valid, w[:, None] * S + kv, S)
+
+    state[...] = jax.lax.fori_loop(0, block_t, body, state[...])
+
+    @pl.when(it == n_t - 1)
+    def _finalize():
+        sT_ref[0, 0] = state[...].astype(sT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def rwkv6_scan(r, k, v, w, u, state0=None, *, block_t: int = 128,
+               interpret: bool = False):
+    """r,k,w: (B,T,H,D); v: (B,T,H,Dv); u: (H,D); state0: (B,H,D,Dv).
+
+    Returns (y (B,T,H,Dv), state (B,H,D,Dv)).
+    """
+    B, T, H, D = r.shape
+    Dv = v.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((B, H, D, Dv), jnp.float32)
+    block_t = min(block_t, T)
+    grid = (B, H, pl.cdiv(T, block_t))
+    kernel = functools.partial(_kernel, block_t=block_t, seq_len=T)
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, 1, D), lambda b, h, it: (b, it, h, 0)),
+            pl.BlockSpec((1, block_t, 1, D), lambda b, h, it: (b, it, h, 0)),
+            pl.BlockSpec((1, block_t, 1, Dv), lambda b, h, it: (b, it, h, 0)),
+            pl.BlockSpec((1, block_t, 1, D), lambda b, h, it: (b, it, h, 0)),
+            pl.BlockSpec((1, D), lambda b, h, it: (h, 0)),
+            pl.BlockSpec((1, 1, D, Dv), lambda b, h, it: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, 1, Dv), lambda b, h, it: (b, it, h, 0)),
+            pl.BlockSpec((1, 1, D, Dv), lambda b, h, it: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, Dv), v.dtype),
+            jax.ShapeDtypeStruct((B, H, D, Dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, Dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state0)
+    return y, sT

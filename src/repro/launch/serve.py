@@ -1,0 +1,55 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Single-model continuous-batching service on reduced configs (CPU), or
+--plan mode: HaX-CoNN concurrent co-serving plan for full configs on the
+production pod split.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import build
+from repro.serve.engine import ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=configs.ARCHS)
+    ap.add_argument("--co-arch", default=None, choices=configs.ARCHS,
+                    help="plan concurrent serving with a second model")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    if args.co_arch:
+        from repro.serve.concurrent import plan_concurrent_serving
+        plan = plan_concurrent_serving(
+            [configs.get(args.arch), configs.get(args.co_arch)],
+            [args.shape, args.shape], objective="latency", deadline_s=20.0)
+        print(plan.summary())
+        return 0
+
+    cfg = configs.get(args.arch).reduced()
+    if not cfg.has_decode:
+        print(f"{args.arch} is encoder-only: no decode service")
+        return 1
+    model = build(cfg, backend="auto")
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, max_slots=4, capacity=128)
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        eng.submit(rng.integers(0, cfg.vocab, size=8), max_new=args.max_new)
+    done = eng.run_until_drained()
+    print(f"served {len(done)} requests, "
+          f"{sum(len(r.tokens) for r in done)} tokens, "
+          f"{eng.steps} decode steps")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,48 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On real hardware this runs under one process per host with
+jax.distributed.initialize(); on this CPU container it trains reduced
+configs end-to-end (full configs are exercised via the dry-run).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import build
+from repro.train.trainer import Trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=configs.ARCHS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="train the reduced smoke config (CPU container)")
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build(cfg, backend="auto")
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                                  global_batch=args.global_batch))
+    trainer = Trainer(model, data, ckpt_dir=args.ckpt_dir)
+    trainer.restore_or_init(jax.random.PRNGKey(args.seed))
+    hist = trainer.run(args.steps, log_every=max(1, args.steps // 10),
+                       on_metrics=lambda m: print(
+                           f"step {m['step']:5d} loss={m['loss']:.4f} "
+                           f"gnorm={m['grad_norm']:.2f}"))
+    print(f"done: final loss {hist[-1]['loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

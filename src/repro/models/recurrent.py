@@ -1,0 +1,182 @@
+"""Temporal-mix blocks without attention: RG-LRU (Griffin) and RWKV-6.
+
+Both reduce to the kernels in :mod:`repro.kernels`: RG-LRU to the gated
+linear recurrence `h_t = a_t h_{t-1} + b_t`, RWKV-6 to the matrix-state
+recurrence.  Decode carries constant-size state (the long_500k enabler).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from . import sharding
+from .layers import dense_init, rmsnorm
+
+RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU residual block (Griffin / recurrentgemma)
+# ---------------------------------------------------------------------------
+
+def init_rglru(cfg: ModelConfig, key):
+    d, r = cfg.d_model, cfg.d_rnn
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    p, s = {}, {}
+    p["ln"], s["ln"] = jnp.zeros((d,), pdt), ("embed",)
+    p["w_in"], s["w_in"] = dense_init(ks[0], (d, r), ("embed", "rnn"), pdt)
+    p["w_gate"], s["w_gate"] = dense_init(ks[1], (d, r), ("embed", "rnn"), pdt)
+    p["conv_w"], s["conv_w"] = (jnp.zeros((4, r), pdt), (None, "rnn"))
+    p["conv_b"], s["conv_b"] = jnp.zeros((r,), pdt), ("rnn",)
+    p["wa"], s["wa"] = dense_init(ks[2], (r, r), ("rnn", None), pdt)
+    p["wx"], s["wx"] = dense_init(ks[3], (r, r), ("rnn", None), pdt)
+    # Λ init so a = sigmoid(Λ) ∈ (0.9, 0.999) as in Griffin
+    lam = jnp.log(jnp.linspace(0.9, 0.999, r) /
+                  (1 - jnp.linspace(0.9, 0.999, r)))
+    p["lam"], s["lam"] = lam.astype(pdt), ("rnn",)
+    p["w_out"], s["w_out"] = dense_init(ks[4], (r, d), ("rnn", "embed"), pdt)
+    return p, s
+
+
+def _causal_conv4(x, w, b, state=None):
+    """Depthwise causal width-4 conv. x: (B,S,r); state: (B,3,r) history."""
+    B, S, r = x.shape
+    if state is None:
+        hist = jnp.zeros((B, 3, r), x.dtype)
+    else:
+        hist = state.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)                # (B, S+3, r)
+    out = sum(xp[:, 3 - i: 3 - i + S] * w[3 - i][None, None, :]
+              for i in range(4))
+    new_state = xp[:, -3:]                                 # last 3 inputs
+    return out + b, new_state
+
+
+def rglru_block(cfg: ModelConfig, p, rules, x, *, state=None,
+                backend="auto"):
+    """Returns (y, new_state); state = {"h": (B,r) f32, "conv": (B,3,r)}."""
+    dt = jnp.dtype(cfg.dtype)
+    h_in = rmsnorm(x, p["ln"]).astype(dt)
+
+    def W(name, logical):
+        return sharding.weight_use(p[name].astype(dt), rules, logical)
+
+    gate = jax.nn.gelu(h_in @ W("w_gate", ("embed", "rnn")))     # (B,S,r)
+    u = h_in @ W("w_in", ("embed", "rnn"))
+    u = sharding.constrain(u, rules, ("batch", "seq", "rnn"))
+    u, conv_state = _causal_conv4(u, p["conv_w"].astype(dt),
+                                  p["conv_b"].astype(dt),
+                                  None if state is None else state["conv"])
+    # RG-LRU gates
+    rgate = jax.nn.sigmoid(u @ W("wa", ("rnn", None)))
+    igate = jax.nn.sigmoid(u @ W("wx", ("rnn", None)))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) \
+        * rgate.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (igate * u).astype(jnp.float32)
+    h0 = None if state is None else state["h"]
+    h_seq, h_last = ops.linear_scan(a.astype(dt), gated_in.astype(dt),
+                                    h0, backend=backend)
+    h_seq = sharding.constrain(h_seq, rules, ("batch", "seq", "rnn"))
+    y = (h_seq * gate) @ W("w_out", ("rnn", "embed"))
+    y = sharding.constrain(y, rules, ("batch", "seq", "embed"))
+    return x + y, {"h": h_last, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 block: time mix + channel mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv(cfg: ModelConfig, key):
+    d, ff = cfg.d_model, cfg.d_ff
+    H = cfg.n_heads if cfg.n_heads else d // 64
+    dh = d // H
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 10)
+    p, s = {}, {}
+    # time mix
+    p["ln_t"], s["ln_t"] = jnp.zeros((d,), pdt), ("embed",)
+    for i, nm in enumerate(("wr", "wk", "wv", "wg")):
+        p[nm], s[nm] = dense_init(ks[i], (d, d), ("embed", "rnn"), pdt)
+    p["wo_t"], s["wo_t"] = dense_init(ks[4], (d, d), ("rnn", "embed"), pdt)
+    for i, nm in enumerate(("mu_r", "mu_k", "mu_v", "mu_w")):
+        p[nm], s[nm] = (jnp.full((d,), 0.5, pdt), ("embed",))
+    # data-dependent decay (low-rank, Finch)
+    p["w0"], s["w0"] = jnp.full((d,), -6.0, pdt), ("rnn",)
+    p["w_lora_a"], s["w_lora_a"] = dense_init(ks[5], (d, 64),
+                                              ("embed", None), pdt)
+    p["w_lora_b"], s["w_lora_b"] = (jnp.zeros((64, d), pdt), (None, "rnn"))
+    p["u"], s["u"] = (jnp.zeros((H, dh), pdt), ("heads", "head_dim"))
+    # channel mix
+    p["ln_c"], s["ln_c"] = jnp.zeros((d,), pdt), ("embed",)
+    p["mu_cr"], s["mu_cr"] = jnp.full((d,), 0.5, pdt), ("embed",)
+    p["mu_ck"], s["mu_ck"] = jnp.full((d,), 0.5, pdt), ("embed",)
+    p["ck"], s["ck"] = dense_init(ks[6], (d, ff), ("embed", "mlp"), pdt)
+    p["cv"], s["cv"] = dense_init(ks[7], (ff, d), ("mlp", "embed"), pdt)
+    p["cr"], s["cr"] = dense_init(ks[8], (d, d), ("embed", "rnn"), pdt)
+    return p, s
+
+
+def _token_shift(x, prev):
+    """x: (B,S,d); prev: (B,d) last token of the previous chunk (or zeros)."""
+    shifted = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    return shifted, x[:, -1]
+
+
+def rwkv_block(cfg: ModelConfig, p, rules, x, *, state=None, backend="auto"):
+    """Returns (y, new_state); state = {"S": (B,H,dh,dh) f32,
+    "x_t": (B,d), "x_c": (B,d)} (token-shift carries)."""
+    dt = jnp.dtype(cfg.dtype)
+    B, S, d = x.shape
+    H = cfg.n_heads if cfg.n_heads else d // 64
+    dh = d // H
+    zeros = jnp.zeros((B, d), dt)
+    st = state or {"S": jnp.zeros((B, H, dh, dh), jnp.float32),
+                   "x_t": zeros, "x_c": zeros}
+
+    # ---- time mix ----
+    h = rmsnorm(x, p["ln_t"]).astype(dt)
+    shifted, x_t_last = _token_shift(h, st["x_t"].astype(dt))
+
+    def W(name, logical=("embed", "rnn")):
+        return sharding.weight_use(p[name].astype(dt), rules, logical)
+
+    def lerp(mu):
+        m = p[mu].astype(dt)
+        return h * (1 - m) + shifted * m
+
+    r = (lerp("mu_r") @ W("wr")).reshape(B, S, H, dh)
+    k = (lerp("mu_k") @ W("wk")).reshape(B, S, H, dh)
+    v = (lerp("mu_v") @ W("wv")).reshape(B, S, H, dh)
+    g = jax.nn.silu(h @ W("wg"))
+    xw = lerp("mu_w")
+    w_log = (p["w0"].astype(jnp.float32)
+             + jnp.tanh(xw.astype(jnp.float32)
+                        @ p["w_lora_a"].astype(jnp.float32))
+             @ p["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, S, H, dh)     # decay in (0,1)
+    r = sharding.constrain(r, rules, ("batch", "seq", "heads", "head_dim"))
+    y, S_new = ops.rwkv6(r, k, v, w.astype(dt), p["u"].astype(dt),
+                         st["S"], backend=backend)
+    y = (y.reshape(B, S, d) * g) @ W("wo_t", ("rnn", "embed"))
+    y = sharding.constrain(y, rules, ("batch", "seq", "embed"))
+    x = x + y
+
+    # ---- channel mix ----
+    hc = rmsnorm(x, p["ln_c"]).astype(dt)
+    shifted_c, x_c_last = _token_shift(hc, st["x_c"].astype(dt))
+    mk = p["mu_ck"].astype(dt)
+    mr = p["mu_cr"].astype(dt)
+    kk = (hc * (1 - mk) + shifted_c * mk) @ W("ck", ("embed", "mlp"))
+    kk = jax.nn.relu(kk)
+    kk = kk * kk
+    kk = sharding.constrain(kk, rules, ("batch", "seq", "mlp"))
+    rr = jax.nn.sigmoid((hc * (1 - mr) + shifted_c * mr)
+                        @ W("cr", ("embed", "rnn")))
+    y2 = rr * (kk @ W("cv", ("mlp", "embed")))
+    y2 = sharding.constrain(y2, rules, ("batch", "seq", "embed"))
+    return x + y2, {"S": S_new, "x_t": x_t_last, "x_c": x_c_last}

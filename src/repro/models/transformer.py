@@ -1,0 +1,254 @@
+"""Layer stack assembly: scan-over-groups, remat, heterogeneous patterns.
+
+The repeating ``cfg.block_pattern`` (e.g. ("rglru","rglru","attn") for
+recurrentgemma) defines a *supergroup*; parameters of all full supergroups
+are stacked on a leading group axis and executed with ``jax.lax.scan``
+(compact HLO, fast SPMD compile); pattern-remainder tail layers run
+unrolled.  Every layer kind exposes the same interface:
+
+    apply_layer(cfg, kind, params, rules, x, positions,
+                cache=None, lengths=None, backend) -> (x, new_cache, aux)
+
+with cache pytrees per kind (attention: kv cache views; rglru: h + conv
+state; rwkv: matrix state + token-shift carries).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import kvcache, layers, moe, recurrent
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def init_layer(cfg: ModelConfig, kind: str, key):
+    kt, kc = jax.random.split(key)
+    p, s = {}, {}
+    if kind in ("attn", "local"):
+        p["t"], s["t"] = layers.init_attention(cfg, kt)
+    elif kind == "rglru":
+        p["t"], s["t"] = recurrent.init_rglru(cfg, kt)
+    elif kind == "rwkv":
+        p["t"], s["t"] = recurrent.init_rwkv(cfg, kt)
+    else:
+        raise ValueError(kind)
+    if kind != "rwkv":                     # rwkv carries its own channel mix
+        if cfg.moe is not None:
+            p["c"], s["c"] = moe.init_moe(cfg, kc)
+        else:
+            p["c"], s["c"] = layers.init_mlp(cfg, kc)
+    return p, s
+
+
+def apply_layer(cfg: ModelConfig, kind: str, p, rules, x, positions, *,
+                cache=None, lengths=None, collect_kv=False, backend="auto",
+                cache_capacity=None):
+    aux = {}
+    new_cache = None
+    if kind in ("attn", "local"):
+        att_cache = None if cache is None else (cache["k"], cache["v"])
+        x, kv = layers.attention_block(
+            cfg, p["t"], rules, x, positions, kind=kind, cache=att_cache,
+            lengths=lengths, backend=backend)
+        if cache is not None:
+            new_cache = {"k": kv[0], "v": kv[1]}
+        elif collect_kv:
+            cap = cache_capacity or x.shape[1]
+            kc, vc = kvcache.from_prefill(
+                kv[0], kv[1], cap, cfg.kv_cache_dtype,
+                cfg.local_window if kind == "local" else None)
+            new_cache = {"k": kc, "v": vc}
+    elif kind == "rglru":
+        x, st = recurrent.rglru_block(cfg, p["t"], rules, x,
+                                      state=cache, backend=backend)
+        new_cache = st if (cache is not None or collect_kv) else None
+    elif kind == "rwkv":
+        x, st = recurrent.rwkv_block(cfg, p["t"], rules, x,
+                                     state=cache, backend=backend)
+        new_cache = st if (cache is not None or collect_kv) else None
+    if "c" in p:
+        if cfg.moe is not None:
+            x, aux = moe.moe_block(cfg, p["c"], rules, x)
+        else:
+            x = layers.mlp_block(cfg, p["c"], rules, x)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stack init
+# ---------------------------------------------------------------------------
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def init_stack(cfg: ModelConfig, key):
+    """Returns (params, specs).  params = {"emb", "groups", "tail"}."""
+    kinds = cfg.layer_kinds
+    P = len(cfg.block_pattern) if cfg.scan_layers else 1
+    pattern = cfg.block_pattern if cfg.scan_layers else (None,)
+    n_groups = len(kinds) // P if cfg.scan_layers else 0
+    n_scanned = n_groups * P
+
+    keys = jax.random.split(key, len(kinds) + 1)
+    p_emb, s_emb = layers.init_embeddings(cfg, keys[-1])
+    params = {"emb": p_emb}
+    specs = {"emb": s_emb}
+
+    if cfg.scan_layers and n_groups > 0:
+        groups, gspecs = [], None
+        for pos in range(P):
+            per_pos = []
+            for g in range(n_groups):
+                li = g * P + pos
+                lp, ls = init_layer(cfg, kinds[li], keys[li])
+                per_pos.append(lp)
+                gspecs_pos = ls
+            stacked = _stack(per_pos)
+            groups.append(stacked)
+            if gspecs is None:
+                gspecs = []
+            # prepend the scan ("layers") axis to every logical tuple
+            gspecs.append(jax.tree.map(
+                lambda lg: ("layers",) + lg, gspecs_pos,
+                is_leaf=lambda x: isinstance(x, tuple) and len(x) > 0
+                and all(isinstance(e, (str, type(None))) for e in x)))
+        params["groups"] = tuple(groups)
+        specs["groups"] = tuple(gspecs)
+    else:
+        n_scanned = 0
+        params["groups"] = ()
+        specs["groups"] = ()
+
+    tail_p, tail_s = [], []
+    for li in range(n_scanned, len(kinds)):
+        lp, ls = init_layer(cfg, kinds[li], keys[li])
+        tail_p.append(lp)
+        tail_s.append(ls)
+    params["tail"] = tuple(tail_p)
+    specs["tail"] = tuple(tail_s)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _is_spec_leaf(x):
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def forward(cfg: ModelConfig, params, batch, rules, *, backend="auto",
+            collect_kv=False, last_only=False, cache_capacity=None):
+    """Full-sequence forward (train / prefill).
+
+    Returns (logits, caches, aux) — caches is None unless collect_kv.
+    """
+    x = layers.embed_tokens(cfg, params["emb"], rules, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    kinds = cfg.layer_kinds
+    P = len(cfg.block_pattern)
+    aux_total = {"moe_aux": 0.0, "moe_z": 0.0}
+
+    group_caches = None
+    if params["groups"]:
+        def group_body(carry, group_params):
+            x, aux_in = carry
+            new_caches = []
+            for pos in range(P):
+                kind = cfg.block_pattern[pos]
+                x, cache, aux = apply_layer(
+                    cfg, kind, group_params[pos], rules, x, positions,
+                    collect_kv=collect_kv, backend=backend,
+                    cache_capacity=cache_capacity)
+                new_caches.append(cache)
+                for k in aux:
+                    aux_in = dict(aux_in, **{k: aux_in.get(k, 0.0) + aux[k]})
+            return (x, aux_in), tuple(new_caches) if collect_kv else None
+
+        body = jax.checkpoint(group_body) if cfg.remat else group_body
+        (x, aux_total), group_caches = jax.lax.scan(
+            body, (x, aux_total), params["groups"])
+
+    tail_caches = []
+    n_scanned = len(kinds) - len(params["tail"])
+    for i, lp in enumerate(params["tail"]):
+        kind = kinds[n_scanned + i]
+
+        def tail_fn(x_, lp_, _kind=kind):
+            return apply_layer(cfg, _kind, lp_, rules, x_, positions,
+                               collect_kv=collect_kv, backend=backend,
+                               cache_capacity=cache_capacity)
+
+        if cfg.remat:   # cost-parity with the checkpointed scan groups
+            tail_fn = jax.checkpoint(tail_fn)
+        x, cache, aux = tail_fn(x, lp)
+        tail_caches.append(cache)
+        for k in aux:
+            aux_total[k] = aux_total.get(k, 0.0) + aux[k]
+
+    if last_only:
+        x = x[:, -1:]
+    logits = layers.logits_head(cfg, params["emb"], rules, x)
+    caches = ({"groups": group_caches, "tail": tuple(tail_caches)}
+              if collect_kv else None)
+    return logits, caches, aux_total
+
+
+def decode_step(cfg: ModelConfig, params, caches, batch, rules, *,
+                backend="auto"):
+    """One-token decode. batch: {"token_ids": (B,1) or "embeds",
+    "lengths": (B,)}.  Returns (logits (B,1,V), new caches)."""
+    lengths = batch["lengths"]
+    x = layers.embed_tokens(cfg, params["emb"], rules, batch)
+    positions = lengths[:, None]                      # (B,1) absolute pos
+    kinds = cfg.layer_kinds
+    P = len(cfg.block_pattern)
+
+    new_group_caches = None
+    if params["groups"]:
+        def group_body(x, scanned):
+            group_params, group_cache = scanned
+            new_caches = []
+            for pos in range(P):
+                kind = cfg.block_pattern[pos]
+                x, cache, _ = apply_layer(
+                    cfg, kind, group_params[pos], rules, x, positions,
+                    cache=group_cache[pos], lengths=lengths, backend=backend)
+                new_caches.append(cache)
+            return x, tuple(new_caches)
+
+        x, new_group_caches = jax.lax.scan(
+            group_body, x, (params["groups"], caches["groups"]))
+
+    new_tail = []
+    n_scanned = len(kinds) - len(params["tail"])
+    for i, lp in enumerate(params["tail"]):
+        kind = kinds[n_scanned + i]
+        x, cache, _ = apply_layer(cfg, kind, lp, rules, x, positions,
+                                  cache=caches["tail"][i], lengths=lengths,
+                                  backend=backend)
+        new_tail.append(cache)
+
+    logits = layers.logits_head(cfg, params["emb"], rules, x)
+    return logits, {"groups": new_group_caches, "tail": tuple(new_tail)}
+
+
+def loss_fn(cfg: ModelConfig, params, batch, rules, *, backend="auto"):
+    logits, _, aux = forward(cfg, params, batch, rules, backend=backend)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    loss, metrics = layers.cross_entropy(cfg, logits, labels, mask)
+    for k, v in aux.items():
+        loss = loss + v
+        metrics[k] = v
+    metrics["loss"] = loss
+    return loss, metrics

@@ -1,0 +1,127 @@
+"""Concurrent multi-model serving with HaX-CoNN schedules — the paper's
+technique as a first-class framework feature.
+
+A pod is split into virtual accelerators (submeshes); each model to be
+served concurrently is exported as a layer-group graph with analytic
+roofline costs per submesh (:mod:`repro.models.graph_export`); the HaX-CoNN
+solver maps groups to submeshes, contention-aware on the shared ICI domain,
+with resharding transition costs; and the plan is evaluated against every
+baseline under the exact contention simulator.
+
+On this CPU-only container the *timing* is simulated (the cost model is the
+dry-run-calibrated roofline) while the *compute* runs for real on reduced
+configs — `CoServer.run_round` executes both models and reports outputs
+plus the schedule's predicted timeline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeCell
+from repro.core import api as core_api
+from repro.core import solver_z3
+from repro.core.accelerators import Platform, tpu_pod_split
+from repro.core.baselines import BASELINES
+from repro.core.graph import DNNGraph
+from repro.core.simulate import SimResult, Workload, simulate
+from repro.models import Model
+from repro.models.graph_export import export_graph
+
+
+@dataclass
+class ServingPlan:
+    graphs: list[DNNGraph]
+    solution: object                  # core.solver_bb.Solution
+    baselines: dict[str, SimResult]
+    platform: Platform
+
+    @property
+    def speedup_vs_best_baseline(self) -> float:
+        best = min(r.latency_ms for r in self.baselines.values()
+                   if r is not None)
+        return best / self.solution.result.latency_ms
+
+    def summary(self) -> str:
+        rows = [f"objective={self.solution.kind} "
+                f"optimal={self.solution.optimal}"]
+        for name, res in self.baselines.items():
+            if res is not None:
+                rows.append(f"  {name:18s} lat={res.latency_ms:9.3f}ms "
+                            f"fps={res.throughput_fps:8.1f}")
+        sol = self.solution
+        rows.append(f"  {'haxconn':18s} lat={sol.result.latency_ms:9.3f}ms "
+                    f"fps={sol.result.throughput_fps:8.1f} "
+                    f"({100 * (self.speedup_vs_best_baseline - 1):+.1f}%)")
+        for wl in sol.workloads:
+            trans = [f"{wl.assignment[i]}->{wl.assignment[i + 1]}@{i}"
+                     for i in range(len(wl.assignment) - 1)
+                     if wl.assignment[i] != wl.assignment[i + 1]]
+            rows.append(f"    {wl.graph.name}: {trans or ['no transition']}")
+        return "\n".join(rows)
+
+
+def plan_concurrent_serving(
+    cfgs: Sequence[ModelConfig],
+    cells: Sequence[str | ShapeCell],
+    platform: Platform | None = None,
+    objective: str = "latency",
+    iterations: Sequence[int] | None = None,
+    deadline_s: float = 20.0,
+) -> ServingPlan:
+    """Schedule concurrent inference of several models on a split pod."""
+    plat = platform or tpu_pod_split()
+    model = core_api.default_model(plat)
+    graphs = []
+    for cfg, cell in zip(cfgs, cells):
+        cell = SHAPES[cell] if isinstance(cell, str) else cell
+        graphs.append(export_graph(cfg, cell, plat))
+    base = {}
+    for name, fn in BASELINES.items():
+        try:
+            base[name] = simulate(plat, fn(plat, graphs,
+                                           iterations=iterations), model)
+        except (ValueError, KeyError):
+            base[name] = None
+    sol = solver_z3.solve(plat, graphs, model, objective=objective,
+                          max_transitions=2, iterations=iterations,
+                          deadline_s=deadline_s)
+    return ServingPlan(graphs, sol, base, plat)
+
+
+# ---------------------------------------------------------------------------
+# CPU-executable co-serving demo (reduced configs, real compute + sim time)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CoServer:
+    """Executes scheduled rounds of two (reduced) models for real while
+    advancing a simulated clock from the plan's exact timeline."""
+
+    models: list[Model]
+    params: list
+    plan: ServingPlan
+    sim_time_ms: float = 0.0
+    rounds: int = 0
+    _fwd: list = field(default_factory=list)
+
+    def __post_init__(self):
+        self._fwd = [jax.jit(m.forward) for m in self.models]
+
+    def run_round(self, batches) -> list[jnp.ndarray]:
+        outs = []
+        for fwd, params, batch in zip(self._fwd, self.params, batches):
+            logits, _ = fwd(params, batch)
+            outs.append(logits)
+        self.sim_time_ms += self.plan.solution.result.makespan
+        self.rounds += 1
+        return outs
+
+    @property
+    def simulated_fps(self) -> float:
+        per_round = sum(len(w.graph.groups) and 1
+                        for w in self.plan.solution.workloads)
+        return 1e3 * self.rounds * per_round / max(self.sim_time_ms, 1e-9)

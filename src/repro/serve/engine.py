@@ -1,0 +1,122 @@
+"""Batched serving engine: continuous batching over decode slots.
+
+A single-model engine: requests enter a queue; free slots admit them via a
+single-request prefill whose cache is spliced into the batched cache; every
+``step()`` runs one batched decode for all active slots (per-slot lengths),
+greedy-samples, and retires finished requests.  This is the vLLM-style
+continuous-batching control loop in miniature — slot admission, per-slot
+lengths, cache capacity management — runnable on CPU with reduced configs
+and lowerable at full scale via the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new: int = 16
+    eos: int | None = None
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, max_slots: int = 4,
+                 capacity: int = 256):
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.capacity = capacity
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * max_slots
+        self.lengths = np.zeros((max_slots,), np.int32)
+        self.last_tok = np.zeros((max_slots,), np.int32)
+        self.caches = model.init_cache(max_slots, capacity)
+        self._rid = itertools.count()
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, capacity=capacity))
+        self.steps = 0
+        self.completed: list[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new: int = 16, eos: int | None = None
+               ) -> Request:
+        req = Request(next(self._rid), np.asarray(prompt, np.int32),
+                      max_new=max_new, eos=eos)
+        self.queue.append(req)
+        return req
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    # ------------------------------------------------------------------
+    def _admit(self):
+        for slot in range(self.max_slots):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            batch = {"token_ids": jnp.asarray(req.prompt)[None]}
+            logits, cache1 = self._prefill(self.params, batch)
+            # splice the single-request cache into the batched cache.
+            # group caches are stacked (n_groups, batch, ...); tail caches
+            # are (batch, ...).
+            new = dict(self.caches)
+            if self.caches["groups"] is not None:
+                new["groups"] = jax.tree.map(
+                    lambda big, one: big.at[:, slot].set(one[:, 0]),
+                    self.caches["groups"], cache1["groups"])
+            new["tail"] = jax.tree.map(
+                lambda big, one: big.at[slot].set(one[0]),
+                self.caches["tail"], cache1["tail"])
+            self.caches = new
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.tokens.append(tok)
+            self.slots[slot] = req
+            self.lengths[slot] = len(req.prompt)
+            self.last_tok[slot] = tok
+
+    def step(self) -> int:
+        """Admit + one batched decode step; returns #active slots."""
+        self._admit()
+        if self.active == 0:
+            return 0
+        batch = {"token_ids": jnp.asarray(self.last_tok)[:, None],
+                 "lengths": jnp.asarray(self.lengths)}
+        logits, self.caches = self._decode(self.params, self.caches, batch)
+        toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        self.steps += 1
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.lengths[slot] += 1
+            tok = int(toks[slot])
+            req.tokens.append(tok)
+            self.last_tok[slot] = tok
+            if (len(req.tokens) >= req.max_new
+                    or (req.eos is not None and tok == req.eos)
+                    or self.lengths[slot] >= self.capacity - 1):
+                req.done = True
+                self.completed.append(req)
+                self.slots[slot] = None
+        return self.active
+
+    def run_until_drained(self, max_steps: int = 10000):
+        while (self.queue or self.active) and self.steps < max_steps:
+            self.step()
+        return self.completed
+
+

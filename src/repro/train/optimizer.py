@@ -1,0 +1,132 @@
+"""Optimizers in pure JAX: AdamW and Adafactor (+ clip, schedules).
+
+Optimizer states are pytrees mirroring the params, so they inherit the
+params' shardings under pjit (FSDP shards optimizer state for free).
+Adafactor keeps factored second moments for >=2-D weights — the memory
+choice for the 132B/235B MoE configs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup: int = 100,
+                  total: int = 10000, floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(1, warmup)
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable          # (grads, state, params, step) -> (upd, state)
+
+
+def adamw(lr: Callable | float, b1=0.9, b2=0.95, eps=1e-8,
+          weight_decay=0.1) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        step_f = jnp.asarray(step, jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** step_f
+        bc2 = 1.0 - b2 ** step_f
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1)
+                         * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        lr_t = lr_fn(step)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        return jax.tree.map(upd, params, m, v), {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: Callable | float, eps=1e-30, clip_threshold=1.0,
+              decay=0.8, weight_decay=0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return jax.tree.map(one, params,
+                            is_leaf=lambda x: isinstance(x, jnp.ndarray))
+
+    def update(grads, state, params, step):
+        beta = 1.0 - (jnp.asarray(step, jnp.float32) + 1.0) ** -decay
+        lr_t = lr_fn(step)
+
+        def one(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = jnp.maximum(vr.mean(-1, keepdims=True), eps)
+                rhat = (vr / denom)[..., None]
+                u = gf / (jnp.sqrt(rhat * vc[..., None, :]) + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf / (jnp.sqrt(v) + eps)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), new_s
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = tree.flatten_up_to(state)
+        out = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        upds = tree.unflatten([o[0] for o in out])
+        new_state = tree.unflatten([o[1] for o in out])
+        return upds, new_state
+
+    return Optimizer(init, update)
+
+
+def make(name: str, lr, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(name)

@@ -1,0 +1,155 @@
+"""Training loop: microbatched grad accumulation, pjit, checkpoint/restart.
+
+``make_train_step`` builds the jit-able step: loss+grad over
+``cfg.microbatches`` microbatches via lax.scan (bounds activation/logits
+memory — the global batch never materializes at once), global-norm clip,
+optimizer update.  ``Trainer`` wraps it with data, checkpointing (periodic +
+emergency-on-signal), restart (bitwise-resumable thanks to the counter-mode
+pipeline), and elastic restore onto a different mesh.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import Model, sharding
+from . import checkpoint as ckpt_lib
+from . import optimizer as opt_lib
+
+
+@dataclass
+class TrainState:
+    step: jnp.ndarray
+    params: Any
+    opt: Any
+
+
+def make_train_step(model: Model, optimizer: opt_lib.Optimizer,
+                    microbatches: int = 1) -> Callable:
+    cfg = model.cfg
+
+    def train_step(state: TrainState, batch):
+        def loss_of(params, mb):
+            return model.loss_fn(params, mb)
+
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_of, has_aux=True)(state.params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(state.params, batch)
+
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, cfg.grad_clip)
+        updates, new_opt = optimizer.update(grads, state.opt, state.params,
+                                            state.step)
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+            state.params, updates)
+        out_metrics = dict(metrics)
+        out_metrics.update(loss=loss, grad_norm=gnorm)
+        return TrainState(state.step + 1, new_params, new_opt), out_metrics
+
+    return train_step
+
+
+jax.tree_util.register_dataclass(TrainState, ("step", "params", "opt"), ())
+
+
+class Trainer:
+    """Fault-tolerant single-controller training driver."""
+
+    def __init__(self, model: Model, data, ckpt_dir: str | None = None,
+                 ckpt_every: int = 50, mesh=None):
+        self.model = model
+        cfg = model.cfg
+        lr = opt_lib.warmup_cosine(cfg.learning_rate)
+        self.optimizer = opt_lib.make(cfg.optimizer, lr,
+                                      **({"weight_decay": cfg.weight_decay}
+                                         if cfg.optimizer == "adamw" else {}))
+        self.data = data
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.mesh = mesh
+        self.step_fn = jax.jit(make_train_step(model, self.optimizer,
+                                               cfg.microbatches),
+                               donate_argnums=(0,))
+        self.state: TrainState | None = None
+        self._interrupted = False
+
+    # ------------------------------------------------------------------
+    def init_state(self, key) -> TrainState:
+        params = self.model.init(key)
+        opt = self.optimizer.init(params)
+        self.state = TrainState(jnp.zeros((), jnp.int32), params, opt)
+        return self.state
+
+    def restore_or_init(self, key) -> TrainState:
+        if self.ckpt_dir and ckpt_lib.latest_step(self.ckpt_dir) is not None:
+            like = jax.eval_shape(lambda: TrainState(
+                jnp.zeros((), jnp.int32),
+                self.model.abstract_params(),
+                self.optimizer.init(self.model.abstract_params())))
+            self.state, _ = ckpt_lib.restore(self.ckpt_dir, like)
+            return self.state
+        return self.init_state(key)
+
+    # ------------------------------------------------------------------
+    def _install_signal_handler(self):
+        def handler(signum, frame):   # emergency checkpoint on preemption
+            self._interrupted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:            # non-main thread (tests)
+            pass
+
+    def run(self, steps: int, log_every: int = 10,
+            on_metrics=None) -> list[dict]:
+        assert self.state is not None, "call restore_or_init first"
+        self._install_signal_handler()
+        history = []
+        t0 = time.perf_counter()
+        start = int(self.state.step)
+        for step in range(start, steps):
+            batch = self.data.batch_at(step)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.state, metrics = self.step_fn(self.state, batch)
+            if self._interrupted:
+                if self.ckpt_dir:
+                    ckpt_lib.save(self.ckpt_dir, int(self.state.step),
+                                  self.state)
+                raise KeyboardInterrupt("preempted; emergency ckpt saved")
+            if self.ckpt_dir and (step + 1) % self.ckpt_every == 0:
+                ckpt_lib.save(self.ckpt_dir, int(self.state.step), self.state)
+            if (step + 1) % log_every == 0 or step == steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step + 1
+                m["wall_s"] = time.perf_counter() - t0
+                history.append(m)
+                if on_metrics:
+                    on_metrics(m)
+        if self.ckpt_dir:
+            ckpt_lib.save(self.ckpt_dir, int(self.state.step), self.state)
+        return history

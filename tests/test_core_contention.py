@@ -1,0 +1,99 @@
+"""Property-based tests for the contention models (PCCS, §3.3)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.contention import (PiecewiseModel, ProportionalShareModel,
+                                   estimate_blackbox_demand, pccs_from_pairs)
+
+demand = st.floats(min_value=0.0, max_value=1.5, allow_nan=False)
+
+
+class TestProportionalShare:
+    @given(own=demand, ext=demand)
+    @settings(max_examples=200, deadline=None)
+    def test_slowdown_at_least_one(self, own, ext):
+        m = ProportionalShareModel()
+        assert m.slowdown(own, ext) >= 1.0
+
+    @given(own=demand, e1=demand, e2=demand)
+    @settings(max_examples=200, deadline=None)
+    def test_monotone_in_external(self, own, e1, e2):
+        m = ProportionalShareModel()
+        lo, hi = sorted([e1, e2])
+        assert m.slowdown(own, lo) <= m.slowdown(own, hi) + 1e-12
+
+    @given(own=demand, ext=demand)
+    @settings(max_examples=200, deadline=None)
+    def test_no_slowdown_under_capacity(self, own, ext):
+        m = ProportionalShareModel(capacity=1.0)
+        if own + ext <= 1.0:
+            assert m.slowdown(own, ext) == 1.0
+
+    def test_hand_value(self):
+        m = ProportionalShareModel(capacity=1.0, sensitivity=1.0)
+        # own 0.8, ext 0.8: dilation 1.6, boundedness 0.8 -> 1 + .8*.6
+        assert m.slowdown(0.8, 0.8) == pytest.approx(1.48)
+
+    def test_zero_demand_immune(self):
+        m = ProportionalShareModel()
+        assert m.slowdown(0.0, 5.0) == 1.0
+
+
+class TestPiecewise:
+    MODEL = PiecewiseModel(
+        own_knots=(0.2, 0.5, 0.8),
+        ext_knots=(0.2, 0.5, 0.8),
+        table=((1.0, 1.05, 1.1),
+               (1.05, 1.2, 1.4),
+               (1.1, 1.4, 1.9)),
+    )
+
+    @given(own=demand, ext=demand)
+    @settings(max_examples=200, deadline=None)
+    def test_bounded_by_table(self, own, ext):
+        s = self.MODEL.slowdown(own, ext)
+        assert 1.0 <= s <= 1.9 + 1e-12
+
+    def test_exact_at_knots(self):
+        assert self.MODEL.slowdown(0.5, 0.5) == pytest.approx(1.2)
+        assert self.MODEL.slowdown(0.8, 0.8) == pytest.approx(1.9)
+
+    def test_bilinear_midpoint(self):
+        # midpoint of the 4 central knots
+        expect = (1.2 + 1.4 + 1.4 + 1.9) / 4
+        assert self.MODEL.slowdown(0.65, 0.65) == pytest.approx(expect)
+
+    def test_clamps_outside_grid(self):
+        assert self.MODEL.slowdown(2.0, 2.0) == pytest.approx(1.9)
+        assert self.MODEL.slowdown(0.01, 0.01) == pytest.approx(1.0)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            PiecewiseModel((0.1,), (0.1,), ((0.5,),))   # slowdown < 1
+        with pytest.raises(ValueError):
+            PiecewiseModel((0.1, 0.2), (0.1,), ((1.0,),))
+
+
+class TestBlackboxEstimation:
+    def test_proportional_scaling(self):
+        # §3.3: DSA demand = GPU demand * (EMC_dsa / EMC_gpu)
+        assert estimate_blackbox_demand(0.6, 0.5, 0.25) == pytest.approx(0.3)
+
+    def test_rejects_zero_util(self):
+        with pytest.raises(ValueError):
+            estimate_blackbox_demand(0.6, 0.0, 0.25)
+
+
+class TestFitting:
+    @given(data=st.lists(
+        st.tuples(st.floats(0.05, 1.0), st.floats(0.05, 1.0),
+                  st.floats(1.0, 3.0)),
+        min_size=3, max_size=20))
+    @settings(max_examples=50, deadline=None)
+    def test_fit_produces_valid_model(self, data):
+        m = pccs_from_pairs(data)
+        for own in (0.1, 0.5, 0.9):
+            for ext in (0.1, 0.5, 0.9):
+                s = m.slowdown(own, ext)
+                assert 1.0 <= s <= max(d[2] for d in data) + 1e-9

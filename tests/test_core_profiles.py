@@ -1,0 +1,145 @@
+"""Calibration tests: profiles reproduce the paper's published numbers."""
+import pytest
+
+from repro.core import api
+from repro.core.graph import DNNGraph
+from repro.core.grouping import RawLayer, group_layers
+from repro.core.profiles import DNN_SET, TABLE2_GOOGLENET, TABLE5, get_graph
+
+
+class TestTable5Calibration:
+    @pytest.mark.parametrize("dnn", sorted(TABLE5))
+    @pytest.mark.parametrize("plat_name,gcol,dcol", [
+        ("agx-orin", 0, 1), ("xavier-agx", 2, 3)])
+    def test_standalone_totals_match(self, dnn, plat_name, gcol, dcol):
+        plat = api.resolve_platform(plat_name)
+        g = get_graph(dnn, plat)
+        assert g.standalone_time("GPU") == pytest.approx(
+            TABLE5[dnn][gcol], rel=1e-6)
+        if TABLE5[dnn][dcol] is not None:
+            assert g.standalone_time("DLA") == pytest.approx(
+                TABLE5[dnn][dcol], rel=1e-6)
+        else:
+            assert "DLA" not in g.accelerators
+
+    def test_densenet_has_no_dla_on_xavier_only(self):
+        xav = get_graph("densenet", api.resolve_platform("xavier-agx"))
+        orin = get_graph("densenet", api.resolve_platform("agx-orin"))
+        assert "DLA" not in xav.accelerators
+        assert "DLA" in orin.accelerators
+
+
+class TestTable2Calibration:
+    def test_googlenet_group_ratios_in_published_range(self):
+        # Raw Table-2 ratios span 1.40x..2.02x; rescaling to the Table-5
+        # standalone totals preserves the relative spread (2.02/1.40) and the
+        # per-group ordering, which is what drives scheduling decisions.
+        g = get_graph("googlenet", api.resolve_platform("xavier-agx"))
+        ratios = [grp.time_on("DLA") / grp.time_on("GPU") for grp in g]
+        assert max(ratios) / min(ratios) == pytest.approx(2.02 / 1.40,
+                                                          rel=0.02)
+        raw = [row[2] / row[1] for row in TABLE2_GOOGLENET]
+        order = sorted(range(len(raw)), key=raw.__getitem__)
+        assert order == sorted(range(len(ratios)), key=ratios.__getitem__)
+
+    def test_googlenet_transition_times_reproduced(self):
+        plat = api.resolve_platform("xavier-agx")
+        g = get_graph("googlenet", plat)
+        for grp, row in zip(g, TABLE2_GOOGLENET):
+            tau = plat.transition_cost_ms(grp.out_bytes, "GPU", "DLA")
+            assert tau == pytest.approx(row[3], abs=2e-3)
+
+    def test_memory_throughput_column(self):
+        g = get_graph("googlenet", api.resolve_platform("xavier-agx"))
+        for grp, row in zip(g, TABLE2_GOOGLENET):
+            assert grp.demand_on("GPU") == pytest.approx(row[4], rel=1e-6)
+            # black-box DSA estimate is below the GPU demand (DLA is slower)
+            assert grp.demand_on("DLA") < grp.demand_on("GPU")
+
+
+class TestFig1CaseStudy:
+    """Fig. 1: VGG-19 + ResNet101 on Xavier AGX."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        plat = api.resolve_platform("xavier-agx")
+        return plat, api.resolve_graphs(["vgg19", "resnet101"], plat)
+
+    def test_case1_serial_gpu(self, setup):
+        _, res = api.evaluate_baseline("fastest_only", ["vgg19", "resnet101"],
+                                       "xavier-agx")
+        assert res.latency_ms == pytest.approx(11.3, rel=0.02)  # paper: 11.3
+
+    def test_case2_naive_concurrent(self, setup):
+        # Paper's Fig. 1 reports 10.6 ms — numerically identical to the
+        # *contention-free* DLA standalone of ResNet101 (Table 5), which is
+        # inconsistent with the paper's own Table-6 contention levels
+        # (exp 1: naive = 16.05 vs a 12.71 contention-free floor, +26%).
+        # Our calibration is anchored to Table 6, so Case 2 lands between
+        # the contention-free floor and the Table-6 inflation level.
+        _, res = api.evaluate_baseline("naive_concurrent",
+                                       ["vgg19", "resnet101"], "xavier-agx")
+        assert 10.6 <= res.latency_ms <= 10.6 * 1.35
+        _, naive_152 = api.evaluate_baseline(
+            "naive_concurrent", ["vgg19", "resnet152"], "xavier-agx")
+        assert 12.71 < naive_152.latency_ms <= 16.05 * 1.05
+
+    def test_case3_haxconn_considerably_better(self, setup):
+        sol = api.schedule(["vgg19", "resnet101"], "xavier-agx", "latency")
+        assert sol.optimal
+        # certified better than the best baseline (serial GPU, 11.29ms) by a
+        # material margin; the paper's headline pair (exp 1, ResNet152)
+        # reaches ~19-23%, checked in benchmarks/table6_scenarios.py.
+        best_base = 11.29
+        improvement = 1 - sol.result.latency_ms / best_base
+        assert 0.05 <= improvement <= 0.40
+        # the optimal schedule uses both accelerators with transitions
+        used = {a for asg in sol.assignments for a in asg}
+        assert used == {"GPU", "DLA"}
+
+
+class TestGrouping:
+    def test_fusion_and_legality_rules(self):
+        layers = [
+            RawLayer("conv1", "conv", {"A": 1.0}, fuse_with_next=True),
+            RawLayer("bn1", "norm", {"A": 0.1}),
+            RawLayer("elt", "eltwise", {"A": 0.2}, no_transition_after=True),
+            RawLayer("conv2", "conv", {"A": 1.0}, reformat_after=True),
+            RawLayer("pool", "pool", {"A": 0.3}),
+            RawLayer("fc", "fc", {"A": 0.5}),
+        ]
+        g = group_layers("net", layers)
+        # conv1+bn1 fused; elt merges into conv2's group; conv2 reformat
+        # merges forward until the cheap pool boundary.
+        assert len(g) == 3
+        assert g[0].name == "conv1..bn1"
+        assert g[0].time_on("A") == pytest.approx(1.1)
+        assert g[1].name == "elt..pool"
+        assert g[2].name == "fc"
+
+    def test_group_total_time_preserved(self):
+        layers = [RawLayer(f"l{i}", "conv", {"A": 0.5, "B": 1.0},
+                           fuse_with_next=(i % 2 == 0)) for i in range(6)]
+        g = group_layers("net", layers)
+        assert g.standalone_time("A") == pytest.approx(3.0)
+        assert g.standalone_time("B") == pytest.approx(6.0)
+
+    def test_merged_preserves_totals(self):
+        plat = api.resolve_platform("xavier-agx")
+        g = get_graph("resnet101", plat)
+        m = g.merged([1, 4])
+        assert isinstance(m, DNNGraph)
+        assert len(m) == 3
+        assert m.standalone_time("GPU") == pytest.approx(
+            g.standalone_time("GPU"))
+        assert m.standalone_time("DLA") == pytest.approx(
+            g.standalone_time("DLA"))
+
+
+@pytest.mark.parametrize("dnn", DNN_SET)
+def test_all_dnns_resolvable_on_all_soc_platforms(dnn):
+    for plat_name in ("agx-orin", "xavier-agx", "snapdragon-865"):
+        plat = api.resolve_platform(plat_name)
+        g = get_graph(dnn, plat)
+        assert len(g) >= 4
+        assert g.standalone_time("GPU") > 0

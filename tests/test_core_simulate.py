@@ -1,0 +1,145 @@
+"""Unit tests for the exact contention-interval timeline simulator."""
+import pytest
+
+from repro.core.accelerators import Accelerator, Platform
+from repro.core.contention import ProportionalShareModel
+from repro.core.graph import DNNGraph, LayerGroup
+from repro.core.simulate import Workload, simulate, validate_assignment
+
+
+def make_platform(epsilon=0.0, trans_bw=100e9):
+    return Platform(
+        name="test",
+        accelerators=(
+            Accelerator("A", peak_flops=1e12, mem_bw=100e9),
+            Accelerator("B", peak_flops=1e12, mem_bw=100e9),
+        ),
+        transition_bw=trans_bw,
+        domains={"EMC": ("A", "B")},
+        domain_bw={"EMC": 100e9},
+        epsilon_ms=epsilon,
+    )
+
+
+def g(name, times, demand=None, out_bytes=0.0, legal=True):
+    return LayerGroup(name=name, times=times, mem_demand=demand or {},
+                      out_bytes=out_bytes, can_transition_after=legal)
+
+
+MODEL = ProportionalShareModel(capacity=1.0, sensitivity=1.0)
+
+
+class TestSingleWorkload:
+    def test_standalone_no_contention(self):
+        plat = make_platform()
+        graph = DNNGraph("net", (g("l0", {"A": 2.0, "B": 3.0}),
+                                 g("l1", {"A": 1.0, "B": 4.0})))
+        res = simulate(plat, [Workload(graph, ("A", "A"))], MODEL)
+        assert res.makespan == pytest.approx(3.0)
+        assert res.contention_ms == pytest.approx(0.0)
+
+    def test_transition_cost_added(self):
+        plat = make_platform()
+        graph = DNNGraph("net", (
+            g("l0", {"A": 2.0, "B": 3.0}, out_bytes=100e9 * 1e-3),  # 1ms move
+            g("l1", {"A": 1.0, "B": 4.0}),
+        ))
+        res = simulate(plat, [Workload(graph, ("A", "B"))], MODEL)
+        assert res.makespan == pytest.approx(2.0 + 1.0 + 4.0)
+
+    def test_iterations_back_to_back(self):
+        plat = make_platform()
+        graph = DNNGraph("net", (g("l0", {"A": 2.0}),))
+        res = simulate(plat, [Workload(graph, ("A",), iterations=5)], MODEL)
+        assert res.makespan == pytest.approx(10.0)
+        assert res.iteration_latencies[0] == pytest.approx([2.0] * 5)
+
+    def test_illegal_transition_rejected(self):
+        plat = make_platform()
+        graph = DNNGraph("net", (g("l0", {"A": 1, "B": 1}, legal=False),
+                                 g("l1", {"A": 1, "B": 1})))
+        with pytest.raises(ValueError, match="illegal transition"):
+            validate_assignment(plat, Workload(graph, ("A", "B")))
+
+
+class TestQueueing:
+    def test_same_accelerator_serializes(self):
+        plat = make_platform()
+        n1 = DNNGraph("n1", (g("x", {"A": 2.0}),))
+        n2 = DNNGraph("n2", (g("y", {"A": 3.0}),))
+        res = simulate(plat, [Workload(n1, ("A",)), Workload(n2, ("A",))],
+                       MODEL)
+        assert res.makespan == pytest.approx(5.0)
+        # FIFO by index: n1 first
+        assert res.finish_times == pytest.approx([2.0, 5.0])
+
+    def test_dependency_pipeline(self):
+        plat = make_platform()
+        n1 = DNNGraph("n1", (g("x", {"A": 2.0}),))
+        n2 = DNNGraph("n2", (g("y", {"B": 3.0}),))
+        res = simulate(plat, [
+            Workload(n1, ("A",), iterations=2),
+            Workload(n2, ("B",), iterations=2, depends_on=0),
+        ], MODEL)
+        # n2 iter0 starts at 2 (after n1 iter0), iter1 starts at max(4, 5)=5
+        assert res.finish_times[1] == pytest.approx(8.0)
+
+
+class TestContention:
+    def test_no_contention_below_capacity(self):
+        plat = make_platform()
+        n1 = DNNGraph("n1", (g("x", {"A": 4.0}, {"A": 0.4}),))
+        n2 = DNNGraph("n2", (g("y", {"B": 4.0}, {"B": 0.5}),))
+        res = simulate(plat, [Workload(n1, ("A",)), Workload(n2, ("B",))],
+                       MODEL)
+        assert res.makespan == pytest.approx(4.0)
+        assert res.contention_ms == pytest.approx(0.0)
+
+    def test_symmetric_oversubscription(self):
+        # both request 0.8 -> total 1.6 -> slowdown 1 + 0.8*0.6 = 1.48
+        plat = make_platform()
+        n1 = DNNGraph("n1", (g("x", {"A": 4.0}, {"A": 0.8}),))
+        n2 = DNNGraph("n2", (g("y", {"B": 4.0}, {"B": 0.8}),))
+        res = simulate(plat, [Workload(n1, ("A",)), Workload(n2, ("B",))],
+                       MODEL)
+        assert res.makespan == pytest.approx(4.0 * 1.48, rel=1e-6)
+
+    def test_asymmetric_tail_runs_clean(self):
+        # n1 (2ms @0.8) overlaps n2 (8ms @0.8): n1 dilates to 2*1.48;
+        # n2 dilated only while n1 active, then clean.
+        plat = make_platform()
+        n1 = DNNGraph("n1", (g("x", {"A": 2.0}, {"A": 0.8}),))
+        n2 = DNNGraph("n2", (g("y", {"B": 8.0}, {"B": 0.8}),))
+        res = simulate(plat, [Workload(n1, ("A",)), Workload(n2, ("B",))],
+                       MODEL)
+        t1 = 2.0 * 1.48
+        # during [0, t1] n2 progressed t1/1.48 = 2.0 standalone-ms
+        expected = t1 + (8.0 - 2.0)
+        assert res.finish_times[0] == pytest.approx(t1)
+        assert res.makespan == pytest.approx(expected, rel=1e-9)
+
+    def test_contention_interval_accounting(self):
+        plat = make_platform()
+        n1 = DNNGraph("n1", (g("x", {"A": 2.0}, {"A": 0.8}),))
+        n2 = DNNGraph("n2", (g("y", {"B": 8.0}, {"B": 0.8}),))
+        res = simulate(plat, [Workload(n1, ("A",)), Workload(n2, ("B",))],
+                       MODEL)
+        # contention_ms = Σ (1 - 1/s)·len over intervals, both slowed in
+        # [0, 2.96]: 2 * 2.96 * (1 - 1/1.48)
+        assert res.contention_ms == pytest.approx(2 * 2.96 * (1 - 1 / 1.48),
+                                                  rel=1e-6)
+
+    def test_timeline_covers_execution(self):
+        plat = make_platform()
+        n1 = DNNGraph("n1", (g("x", {"A": 2.0}, {"A": 0.6}),
+                             g("z", {"A": 1.0, "B": 1.0}, {"A": 0.5, "B": 0.5})))
+        n2 = DNNGraph("n2", (g("y", {"B": 3.0}, {"B": 0.7}),))
+        res = simulate(plat, [Workload(n1, ("A", "B")), Workload(n2, ("B",))],
+                       MODEL)
+        for iv in res.timeline:
+            assert iv.end >= iv.start
+            assert iv.slowdown >= 1.0
+        # per-workload executed standalone-time equals graph times
+        exec0 = sum((iv.end - iv.start) / iv.slowdown
+                    for iv in res.timeline if iv.workload == 0)
+        assert exec0 == pytest.approx(3.0, rel=1e-9)

@@ -1,0 +1,155 @@
+"""Solver correctness: optimality, never-worse guarantee, encoding agreement."""
+import random
+
+import pytest
+
+from repro.core import api, solver_bb, solver_z3
+from repro.core.accelerators import Accelerator, Platform
+from repro.core.baselines import BASELINES
+from repro.core.contention import ProportionalShareModel
+from repro.core.dynamic import DHaXCoNN
+from repro.core.graph import DNNGraph, LayerGroup
+from repro.core.simulate import simulate
+
+MODEL = ProportionalShareModel(capacity=1.0, sensitivity=1.5)
+
+
+def rand_platform(rng):
+    return Platform(
+        name="rand",
+        accelerators=(
+            Accelerator("A", 1e12, 100e9, transition_in_ms=0.01,
+                        transition_out_ms=0.01),
+            Accelerator("B", 1e12, 100e9, transition_in_ms=0.02,
+                        transition_out_ms=0.02),
+        ),
+        transition_bw=100e9,
+        domains={"EMC": ("A", "B")},
+        domain_bw={"EMC": 100e9},
+    )
+
+
+def rand_graph(rng, name, n):
+    groups = []
+    for i in range(n):
+        ta = rng.uniform(0.1, 2.0)
+        ratio = rng.uniform(1.1, 3.0)
+        da = rng.uniform(0.2, 0.9)
+        groups.append(LayerGroup(
+            name=f"{name}{i}",
+            times={"A": ta, "B": ta * ratio},
+            mem_demand={"A": da, "B": da * ta / (ta * ratio)},
+            out_bytes=rng.uniform(0, 2e6),
+            can_transition_after=rng.random() > 0.2,
+        ))
+    return DNNGraph(name, tuple(groups))
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("objective", ["latency", "throughput"])
+def test_z3_matches_bb_oracle(seed, objective):
+    """CEGAR-Z3 and exhaustive branch&bound find the same optimum."""
+    rng = random.Random(seed)
+    plat = rand_platform(rng)
+    graphs = [rand_graph(rng, "n1", rng.randint(3, 5)),
+              rand_graph(rng, "n2", rng.randint(3, 5))]
+    bb = solver_bb.solve(plat, graphs, MODEL, objective, max_transitions=2)
+    z = solver_z3.solve(plat, graphs, MODEL, objective, max_transitions=2)
+    assert z.optimal
+    assert z.objective == pytest.approx(bb.objective, rel=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_never_worse_than_baselines(seed):
+    """§5.2: HaX-CoNN falls back to the baseline when no split helps."""
+    rng = random.Random(100 + seed)
+    plat = rand_platform(rng)
+    graphs = [rand_graph(rng, "n1", rng.randint(3, 6)),
+              rand_graph(rng, "n2", rng.randint(3, 6))]
+    sol = solver_z3.solve(plat, graphs, MODEL, "latency", max_transitions=2)
+    for name, fn in BASELINES.items():
+        wls = fn(plat, graphs)
+        res = simulate(plat, wls, MODEL)
+        assert sol.objective <= res.objective("latency") + 1e-9, name
+
+
+def test_monolithic_agrees_with_cegar():
+    """The paper's direct Eq. 1-11 encoding lands near the exact optimum.
+
+    The monolithic encoding linearizes contention per overlap interval
+    (dur = t + Σ overlap·(s-1)) whereas the simulator integrates rates, so
+    the two disagree by the linearization error; the monolithic schedule
+    re-evaluated under the exact model must stay within 15% of the CEGAR
+    optimum (and is exactly optimal under its own timing model).
+    """
+    plat = api.resolve_platform("xavier-agx")
+    graphs = api.resolve_graphs(["vgg19", "resnet101"], plat)
+    merged = [g.merged(list(range(1, len(g), 3))) for g in graphs]
+    m = api.default_model(plat)
+    mono = solver_z3.solve_monolithic(plat, merged, m, "latency",
+                                      max_transitions=1, timeout_s=120)
+    ceg = solver_z3.solve(plat, merged, m, "latency", max_transitions=1)
+    assert ceg.objective <= mono.objective + 1e-9
+    assert mono.objective <= ceg.objective * 1.15
+
+
+def test_respects_transition_legality():
+    rng = random.Random(7)
+    plat = rand_platform(rng)
+    groups = [
+        LayerGroup("a", {"A": 1.0, "B": 1.2}, {"A": 0.5, "B": 0.4},
+                   can_transition_after=False),
+        LayerGroup("b", {"A": 1.0, "B": 0.2}, {"A": 0.5, "B": 0.4}),
+    ]
+    g1 = DNNGraph("n1", tuple(groups))
+    g2 = rand_graph(rng, "n2", 3)
+    sol = solver_z3.solve(plat, [g1, g2], MODEL, "latency")
+    a = sol.assignments[0]
+    assert a[0] == a[1]     # illegal boundary collapsed
+
+
+def test_max_transitions_respected():
+    rng = random.Random(11)
+    plat = rand_platform(rng)
+    graphs = [rand_graph(rng, "n1", 6), rand_graph(rng, "n2", 6)]
+    sol = solver_z3.solve(plat, graphs, MODEL, "latency", max_transitions=1)
+    for asg in sol.assignments:
+        trans = sum(1 for i in range(len(asg) - 1) if asg[i] != asg[i + 1])
+        assert trans <= 1
+
+
+def test_heterogeneous_support_matrix():
+    """A DNN lacking DLA support (DenseNet on Xavier) must stay on GPU."""
+    plat = api.resolve_platform("xavier-agx")
+    graphs = api.resolve_graphs(["densenet", "resnet18"], plat)
+    sol = solver_z3.solve(plat, graphs, api.default_model(plat), "latency",
+                          max_transitions=2)
+    assert all(a == "GPU" for a in sol.assignments[0])
+
+
+class TestDynamic:
+    def test_monotone_improvement_and_convergence(self):
+        plat = api.resolve_platform("xavier-agx")
+        graphs = api.resolve_graphs(["vgg19", "resnet101"], plat)
+        m = api.default_model(plat)
+        d = DHaXCoNN(plat, graphs, m, "latency", max_transitions=2)
+        objs = [d.best.objective]
+        for _ in range(40):
+            d.step(0.25)
+            objs.append(d.best.objective)
+            if d.converged:
+                break
+        assert d.converged
+        assert all(b <= a + 1e-12 for a, b in zip(objs, objs[1:]))
+        bb = solver_bb.solve(plat, graphs, m, "latency", max_transitions=2)
+        assert d.best.objective == pytest.approx(bb.objective, rel=1e-6)
+
+    def test_initial_schedule_is_best_naive(self):
+        plat = api.resolve_platform("xavier-agx")
+        graphs = api.resolve_graphs(["googlenet", "resnet152"], plat)
+        m = api.default_model(plat)
+        d = DHaXCoNN(plat, graphs, m, "latency")
+        base = min(
+            simulate(plat, fn(plat, graphs), m).objective("latency")
+            for fn in BASELINES.values())
+        assert d.best.objective == pytest.approx(base, rel=1e-9)

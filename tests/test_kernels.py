@@ -1,0 +1,159 @@
+"""Kernel validation: shape/dtype sweeps, every backend vs the jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEYS = jax.random.split(jax.random.PRNGKey(42), 8)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+ATTN_SHAPES = [
+    # (B, Sq, Skv, Hq, Hkv, D)
+    (1, 128, 128, 4, 4, 64),      # MHA
+    (2, 256, 256, 8, 2, 64),      # GQA 4:1
+    (1, 64, 64, 4, 1, 128),       # MQA
+    (2, 96, 96, 4, 2, 32),        # non-128 seq (masked tail tiles)
+]
+
+
+class TestAttention:
+    @pytest.mark.parametrize("shape", ATTN_SHAPES)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+    @pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                               (True, 48)])
+    def test_vs_oracle(self, shape, dtype, backend, causal, window):
+        B, Sq, Skv, Hq, Hkv, D = shape
+        q = rand(KEYS[0], (B, Sq, Hq, D), dtype)
+        k = rand(KEYS[1], (B, Skv, Hkv, D), dtype)
+        v = rand(KEYS[2], (B, Skv, Hkv, D), dtype)
+        got = ops.attention(q, k, v, causal=causal, window=window,
+                            backend=backend, block_q=64, block_kv=64)
+        want = ref.attention(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(
+            got.astype(jnp.float32), want.astype(jnp.float32), **tol(dtype))
+
+    def test_decode_offset_queries(self):
+        """Sq < Skv: queries are the last Sq positions (chunked prefill)."""
+        q = rand(KEYS[0], (2, 32, 4, 64), jnp.float32)
+        k = rand(KEYS[1], (2, 128, 4, 64), jnp.float32)
+        v = rand(KEYS[2], (2, 128, 4, 64), jnp.float32)
+        got = ops.attention(q, k, v, causal=True, backend="xla", block_kv=32)
+        want = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    def test_grad_flows_xla(self):
+        q = rand(KEYS[0], (1, 64, 2, 32), jnp.float32)
+        k = rand(KEYS[1], (1, 64, 2, 32), jnp.float32)
+        v = rand(KEYS[2], (1, 64, 2, 32), jnp.float32)
+        g = jax.grad(lambda q_: ops.attention(
+            q_, k, v, backend="xla", block_kv=16).sum())(q)
+        assert np.isfinite(np.asarray(g)).all()
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("shape", [(2, 128, 8, 2, 64), (1, 96, 4, 4, 32),
+                                       (3, 256, 4, 1, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+    def test_vs_oracle(self, shape, dtype, backend):
+        B, S, Hq, Hkv, D = shape
+        q = rand(KEYS[0], (B, 1, Hq, D), dtype)
+        k = rand(KEYS[1], (B, S, Hkv, D), dtype)
+        v = rand(KEYS[2], (B, S, Hkv, D), dtype)
+        lengths = jnp.array([S // 2 + 7 * i + 1 for i in range(B)],
+                            jnp.int32) % S + 1
+        got = ops.decode_attention(q, k, v, lengths, backend=backend)
+        want = ref.attention(q, k, v, causal=True, lengths=lengths)
+        np.testing.assert_allclose(
+            got.astype(jnp.float32), want.astype(jnp.float32), **tol(dtype))
+
+
+class TestLinearScan:
+    @pytest.mark.parametrize("shape", [(2, 64, 32), (1, 100, 256),
+                                       (3, 33, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+    @pytest.mark.parametrize("with_h0", [False, True])
+    def test_vs_oracle(self, shape, dtype, backend, with_h0):
+        B, S, D = shape
+        a = jax.nn.sigmoid(rand(KEYS[0], shape, jnp.float32)).astype(dtype)
+        b = rand(KEYS[1], shape, dtype)
+        h0 = rand(KEYS[2], (B, D), dtype) if with_h0 else None
+        h, hT = ops.linear_scan(a, b, h0, backend=backend)
+        h_ref, hT_ref = ref.linear_scan(a, b, h0)
+        np.testing.assert_allclose(h.astype(jnp.float32),
+                                   h_ref.astype(jnp.float32), **tol(dtype))
+        np.testing.assert_allclose(np.asarray(hT, np.float32),
+                                   np.asarray(hT_ref, np.float32),
+                                   **tol(dtype))
+
+    def test_decay_composition_property(self):
+        """Scanning [0:k) then [k:S) with carried state == one scan."""
+        B, S, D = 2, 48, 16
+        a = jax.nn.sigmoid(rand(KEYS[0], (B, S, D), jnp.float32))
+        b = rand(KEYS[1], (B, S, D), jnp.float32)
+        h_full, hT_full = ops.linear_scan(a, b, backend="xla")
+        k = 20
+        _, h1 = ops.linear_scan(a[:, :k], b[:, :k], backend="xla")
+        h2_all, h2 = ops.linear_scan(a[:, k:], b[:, k:], h1, backend="xla")
+        np.testing.assert_allclose(np.asarray(hT_full), np.asarray(h2),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(h_full[:, k:]),
+                                   np.asarray(h2_all), atol=1e-5, rtol=1e-5)
+
+
+class TestRWKV6:
+    @pytest.mark.parametrize("shape", [(1, 32, 2, 16, 16), (2, 17, 4, 32, 32),
+                                       (1, 64, 1, 64, 64)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+    def test_vs_oracle(self, shape, dtype, backend):
+        B, T, H, D, Dv = shape
+        r = rand(KEYS[0], (B, T, H, D), dtype)
+        k = rand(KEYS[1], (B, T, H, D), dtype) * 0.3
+        v = rand(KEYS[2], (B, T, H, Dv), dtype)
+        w = jax.nn.sigmoid(rand(KEYS[3], (B, T, H, D), jnp.float32) + 2.0
+                           ).astype(dtype)
+        u = rand(KEYS[4], (H, D), dtype) * 0.3
+        s0 = rand(KEYS[5], (B, H, D, Dv), jnp.float32) * 0.1
+        y, sT = ops.rwkv6(r, k, v, w, u, s0, backend=backend)
+        y_ref, sT_ref = ref.rwkv6(r, k, v, w, u, s0)
+        np.testing.assert_allclose(y.astype(jnp.float32),
+                                   y_ref.astype(jnp.float32),
+                                   atol=5e-2 if dtype == jnp.bfloat16
+                                   else 1e-4, rtol=5e-2)
+        np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_ref),
+                                   atol=5e-2 if dtype == jnp.bfloat16
+                                   else 1e-4, rtol=5e-2)
+
+    def test_state_streaming_property(self):
+        """Chunked evaluation with carried state == full evaluation."""
+        B, T, H, D, Dv = 1, 40, 2, 16, 16
+        r = rand(KEYS[0], (B, T, H, D), jnp.float32)
+        k = rand(KEYS[1], (B, T, H, D), jnp.float32) * 0.3
+        v = rand(KEYS[2], (B, T, H, Dv), jnp.float32)
+        w = jax.nn.sigmoid(rand(KEYS[3], (B, T, H, D), jnp.float32) + 2.0)
+        u = rand(KEYS[4], (H, D), jnp.float32) * 0.3
+        y_full, s_full = ops.rwkv6(r, k, v, w, u, backend="xla")
+        cut = 23
+        y1, s1 = ops.rwkv6(r[:, :cut], k[:, :cut], v[:, :cut], w[:, :cut],
+                           u, backend="xla")
+        y2, s2 = ops.rwkv6(r[:, cut:], k[:, cut:], v[:, cut:], w[:, cut:],
+                           u, s1, backend="xla")
+        np.testing.assert_allclose(np.asarray(y_full[:, cut:]),
+                                   np.asarray(y2), atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
+                                   atol=1e-5, rtol=1e-5)
