@@ -28,6 +28,7 @@ SUITES = [
     "fig6_contention",
     "fig7_dynamic",
     "roofline_table",
+    "serve_gateway",
 ]
 
 

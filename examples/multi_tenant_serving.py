@@ -1,0 +1,84 @@
+"""Multi-tenant serving through the contention-aware gateway.
+
+Two heterogeneous LLMs (stablelm-1.6b + llama3.2-3b) are served
+*concurrently* by :class:`repro.serve.gateway.MultiTenantGateway`:
+
+  1. each tenant's full-size config is characterized as a prefill->decode
+     phase chain and the HaX-CoNN solver maps (model, phase) pairs onto an
+     asymmetric pod split — beating the naive round-robin placement on
+     simulated throughput;
+  2. both reduced-config models then serve real batched requests on CPU
+     under a shared KV-memory budget (admission control defers slots when
+     the global working set would overflow);
+  3. an injected slowdown on one tenant trips the §4.4 monitor and the
+     gateway re-solves the schedule live.
+
+    PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+import numpy as np
+
+from repro import configs
+from repro.core.accelerators import tpu_pod_split
+from repro.serve.gateway import (GatewayConfig, MultiTenantGateway,
+                                 TenantSpec, kv_bytes_per_token)
+
+
+def main():
+    print("=" * 70)
+    print("1) Plan: stablelm-1.6b + llama3.2-3b on an asymmetric pod split")
+    print("=" * 70)
+    platform = tpu_pod_split(4, 12, name="v5e-4x12-split")
+    specs = [
+        TenantSpec("stablelm", configs.get("stablelm-1.6b").reduced(),
+                   plan_cfg=configs.get("stablelm-1.6b"),
+                   max_slots=2, capacity=48, prompt_len=128, max_new=8),
+        TenantSpec("llama", configs.get("llama3.2-3b").reduced(),
+                   plan_cfg=configs.get("llama3.2-3b"),
+                   max_slots=2, capacity=48, prompt_len=128, max_new=8),
+    ]
+    # budget for ~3 of the 4 possible slots: admission throttles the rest
+    budget = 3 * max(s.kv_bytes_per_slot for s in specs)
+    gw = MultiTenantGateway(specs, GatewayConfig(
+        platform=platform, memory_budget_bytes=budget,
+        patience=2, cooldown=4))
+    print(gw.plan.summary())
+    assert gw.plan.speedup_vs_round_robin > 1.0, \
+        "contention-aware plan must beat round-robin"
+
+    print()
+    print("=" * 70)
+    print("2) Serve: real tokens, shared KV budget "
+          f"({budget / 1024:.0f} KiB across all tenants)")
+    print("=" * 70)
+    rng = np.random.default_rng(0)
+    for name, s in gw.specs.items():
+        for _ in range(3):
+            gw.submit(name, rng.integers(0, s.cfg.vocab, size=6))
+    while gw.has_work and gw.total_steps < 500:
+        # replayed measurement stream (in lieu of real SoC counters): a
+        # co-runner appears on llama's mesh from step 6 on, 5x its nominal
+        # step latency; stablelm stays on-prediction throughout.
+        llama_ms = 5.0 if gw.total_steps >= 6 else 1.0
+        gw.step(observed_ms={"stablelm": 1.0, "llama": llama_ms})
+    for name, eng in gw.engines.items():
+        done = eng.completed
+        print(f"  {name:10s}: {len(done)} requests, "
+              f"{sum(len(r.tokens) for r in done)} tokens, "
+              f"sample output: {done[0].tokens}")
+    print(f"  gateway steps: {gw.total_steps}, "
+          f"deferred admissions (budget): {gw.deferred_admissions}")
+
+    print()
+    print("=" * 70)
+    print("3) Dynamic loop: injected slowdown -> re-schedule events")
+    print("=" * 70)
+    for ev in gw.reschedules:
+        print(f"  step {ev.step}: tenants={ev.tenants} "
+              f"observed {ev.observed_factor:.2f}x slower -> re-solved "
+              f"({'new assignment' if ev.changed else 'schedule confirmed'})")
+    if not gw.reschedules:
+        print("  (no deviation large enough — monitor stayed quiet)")
+
+
+if __name__ == "__main__":
+    main()

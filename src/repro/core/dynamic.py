@@ -123,3 +123,82 @@ class DHaXCoNN:
     # ------------------------------------------------------------------
     def current_workloads(self) -> list[Workload]:
         return self.best.workloads
+
+
+# ---------------------------------------------------------------------------
+# §4.4 runtime trigger: when *measured* step latency deviates from the
+# schedule's *predicted* latency, the live schedule is stale (workload mix
+# changed, thermal throttling, a co-runner the model did not know about) and
+# the anytime solver should be given another slice.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SlowdownMonitor:
+    """Deviation detector over an observed/predicted latency stream.
+
+    ``observe`` folds each measurement into an EWMA of the slowdown ratio
+    ``observed / predicted``; once the smoothed ratio stays above
+    ``threshold`` for ``patience`` consecutive observations the monitor
+    fires (returns True) and then holds off for ``cooldown`` observations so
+    one sustained deviation triggers one re-schedule, not a storm.  Ratios
+    *below* 1 (running faster than predicted) never fire.
+    """
+
+    threshold: float = 1.5
+    patience: int = 3
+    cooldown: int = 16
+    #: observations folded into the EWMA before firing is allowed — absorbs
+    #: warmup noise (JIT compilation, cache population) after (re)start.
+    warmup: int = 4
+    alpha: float = 0.5            # EWMA weight of the newest observation
+
+    ratio: float = field(init=False, default=1.0)
+    strikes: int = field(init=False, default=0)
+    fired: int = field(init=False, default=0)
+    _holdoff: int = field(init=False, default=0)
+
+    def __post_init__(self):
+        self._holdoff = self.warmup
+
+    def observe(self, observed_ms: float, predicted_ms: float) -> bool:
+        if predicted_ms <= 0.0 or observed_ms < 0.0:
+            return False
+        r = observed_ms / predicted_ms
+        self.ratio = self.alpha * r + (1.0 - self.alpha) * self.ratio
+        if self._holdoff > 0:
+            self._holdoff -= 1
+            return False
+        if self.ratio > self.threshold:
+            self.strikes += 1
+        else:
+            self.strikes = 0
+        if self.strikes >= self.patience:
+            self.strikes = 0
+            self.fired += 1
+            self._holdoff = self.cooldown
+            return True
+        return False
+
+    def reset(self) -> None:
+        """Forget history (call after the schedule actually changed)."""
+        self.ratio = 1.0
+        self.strikes = 0
+        self._holdoff = self.cooldown
+
+
+@dataclass(frozen=True)
+class ScaledContentionModel:
+    """Online recalibration: scale a base model's *excess* slowdown.
+
+    When the monitor observes the system running ``factor``× slower than the
+    schedule predicted, re-solving under ``ScaledContentionModel(base,
+    factor)`` makes the solver price contention at the observed severity —
+    the paper's feedback from measurement into schedule generation — without
+    refitting the underlying PCCS surface.
+    """
+
+    base: ContentionModel
+    factor: float = 1.0
+
+    def slowdown(self, own: float, external: float) -> float:
+        return 1.0 + self.factor * (self.base.slowdown(own, external) - 1.0)

@@ -1,8 +1,10 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Single-model continuous-batching service on reduced configs (CPU), or
---plan mode: HaX-CoNN concurrent co-serving plan for full configs on the
-production pod split.
+Single-model continuous-batching service on reduced configs (CPU);
+--co-arch plans HaX-CoNN concurrent co-serving for full configs on the
+production pod split; --gateway additionally *serves* both models
+concurrently through the contention-aware multi-tenant gateway (phase-aware
+schedule, shared KV budget, dynamic re-scheduling).
 """
 from __future__ import annotations
 
@@ -16,15 +18,59 @@ from repro.models import build
 from repro.serve.engine import ServingEngine
 
 
+def _run_gateway(args) -> int:
+    from repro.core.accelerators import tpu_pod_split
+    from repro.serve.gateway import (GatewayConfig, MultiTenantGateway,
+                                     TenantSpec)
+    archs = [args.arch, args.co_arch]
+    specs = [TenantSpec(a, configs.get(a).reduced(),
+                        plan_cfg=configs.get(a), max_slots=4, capacity=96,
+                        max_new=args.max_new)
+             for a in archs]
+    budget = (args.budget_slots * max(s.kv_bytes_per_slot for s in specs)
+              if args.budget_slots else None)
+    gw = MultiTenantGateway(specs, GatewayConfig(
+        platform=tpu_pod_split(4, 12, name="v5e-4x12-split"),
+        memory_budget_bytes=budget))
+    print(gw.plan.summary())
+    rng = np.random.default_rng(0)
+    for name, s in gw.specs.items():
+        for _ in range(args.requests):
+            gw.submit(name, rng.integers(0, s.cfg.vocab, size=8))
+    done = gw.run_until_drained()
+    for name, reqs in done.items():
+        print(f"{name}: served {len(reqs)} requests, "
+              f"{sum(len(r.tokens) for r in reqs)} tokens")
+    print(f"gateway steps={gw.total_steps} "
+          f"deferred={gw.deferred_admissions} "
+          f"reschedules={len(gw.reschedules)}")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True, choices=configs.ARCHS)
     ap.add_argument("--co-arch", default=None, choices=configs.ARCHS,
                     help="plan concurrent serving with a second model")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve --arch and --co-arch concurrently through "
+                         "the multi-tenant gateway (requires --co-arch)")
+    ap.add_argument("--budget-slots", type=int, default=0,
+                    help="shared KV budget in slot units (0 = unlimited)")
     ap.add_argument("--shape", default="decode_32k")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args(argv)
+
+    if args.gateway:
+        if not args.co_arch:
+            ap.error("--gateway requires --co-arch")
+        if args.co_arch == args.arch:
+            ap.error("--gateway needs two distinct models")
+        for a in (args.arch, args.co_arch):
+            if not configs.get(a).has_decode:
+                ap.error(f"{a} is encoder-only: no decode service")
+        return _run_gateway(args)
 
     if args.co_arch:
         from repro.serve.concurrent import plan_concurrent_serving

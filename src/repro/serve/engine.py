@@ -7,11 +7,19 @@ greedy-samples, and retires finished requests.  This is the vLLM-style
 continuous-batching control loop in miniature — slot admission, per-slot
 lengths, cache capacity management — runnable on CPU with reduced configs
 and lowerable at full scale via the dry-run.
+
+The engine is non-blocking by design: one ``step()`` call performs at most
+one batched decode and returns, so an external multiplexer (the multi-tenant
+gateway in :mod:`repro.serve.gateway`) can interleave several engines.  An
+optional ``admission_gate`` lets that multiplexer impose global policies
+(shared memory budget, fairness) on slot admission without changing the
+single-engine control flow.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from collections import deque
 from typing import Callable
 
@@ -32,9 +40,26 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class EngineMetrics:
+    """Rolling counters a multiplexer can poll between ``step()`` calls."""
+
+    steps: int = 0
+    admitted: int = 0
+    tokens_out: int = 0
+    #: wall-clock ms of the most recent decode step (prefills excluded).
+    last_step_ms: float = 0.0
+    decode_ms_total: float = 0.0
+
+    @property
+    def mean_step_ms(self) -> float:
+        return self.decode_ms_total / self.steps if self.steps else 0.0
+
+
 class ServingEngine:
     def __init__(self, model: Model, params, max_slots: int = 4,
-                 capacity: int = 256):
+                 capacity: int = 256,
+                 admission_gate: Callable[[Request], bool] | None = None):
         self.model = model
         self.params = params
         self.max_slots = max_slots
@@ -50,6 +75,10 @@ class ServingEngine:
             lambda p, b: model.prefill(p, b, capacity=capacity))
         self.steps = 0
         self.completed: list[Request] = []
+        #: consulted before each queue->slot admission; ``False`` defers the
+        #: head request (FIFO is preserved: admission stops for this step).
+        self.admission_gate = admission_gate
+        self.metrics = EngineMetrics()
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new: int = 16, eos: int | None = None
@@ -63,11 +92,19 @@ class ServingEngine:
     def active(self) -> int:
         return sum(1 for s in self.slots if s is not None)
 
+    @property
+    def has_work(self) -> bool:
+        """Anything queued or decoding — i.e. ``step()`` would make progress."""
+        return bool(self.queue) or self.active > 0
+
     # ------------------------------------------------------------------
     def _admit(self):
         for slot in range(self.max_slots):
             if self.slots[slot] is not None or not self.queue:
                 continue
+            if (self.admission_gate is not None
+                    and not self.admission_gate(self.queue[0])):
+                break
             req = self.queue.popleft()
             batch = {"token_ids": jnp.asarray(req.prompt)[None]}
             logits, cache1 = self._prefill(self.params, batch)
@@ -88,16 +125,29 @@ class ServingEngine:
             self.slots[slot] = req
             self.lengths[slot] = len(req.prompt)
             self.last_tok[slot] = tok
+            self.metrics.admitted += 1
+            self.metrics.tokens_out += 1
 
     def step(self) -> int:
-        """Admit + one batched decode step; returns #active slots."""
+        """Admit + one batched decode step; returns #active slots.
+
+        Non-blocking from the caller's perspective: exactly one batched
+        decode dispatch, timed into ``metrics.last_step_ms`` so a
+        multiplexer can compare observed step latency against a schedule's
+        prediction.
+        """
         self._admit()
         if self.active == 0:
             return 0
+        t0 = time.perf_counter()
         batch = {"token_ids": jnp.asarray(self.last_tok)[:, None],
                  "lengths": jnp.asarray(self.lengths)}
         logits, self.caches = self._decode(self.params, self.caches, batch)
         toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        self.metrics.last_step_ms = (time.perf_counter() - t0) * 1e3
+        self.metrics.decode_ms_total += self.metrics.last_step_ms
+        self.metrics.steps += 1
+        self.metrics.tokens_out += self.active
         self.steps += 1
         for slot, req in enumerate(self.slots):
             if req is None:

@@ -1,0 +1,82 @@
+"""Optional-hypothesis shim for the property-based tests.
+
+When ``hypothesis`` is installed the real ``given``/``settings``/``st`` are
+re-exported unchanged.  When it is missing (the CPU container ships without
+it) the property tests degrade to a deterministic grid of examples instead
+of erroring at collection time: each fallback strategy carries a small fixed
+sample list and ``given`` runs the test body over their (capped) cartesian
+product.  Far weaker than hypothesis — but it keeps every invariant
+exercised and the tier-1 suite collectable everywhere.
+"""
+from __future__ import annotations
+
+import itertools
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    class _St:
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            lo, hi = float(min_value), float(max_value)
+            span = hi - lo
+            return _Strategy([lo, lo + 0.1 * span, lo + 0.5 * span,
+                              lo + 0.9 * span, hi])
+
+        @staticmethod
+        def tuples(*strategies):
+            # stagger each component cycle by its position so tuples are
+            # not locked to the all-equal-index diagonal
+            cycled = []
+            for i, s in enumerate(strategies):
+                c = itertools.cycle(s.samples)
+                for _ in range(i):
+                    next(c)
+                cycled.append(c)
+            n = max(len(s.samples) for s in strategies)
+            return _Strategy([tuple(next(c) for c in cycled)
+                              for _ in range(n)])
+
+        @staticmethod
+        def lists(strategy, min_size=0, max_size=10, **_kw):
+            base = strategy.samples
+            out = []
+            for size in {max(min_size, 1), min(max_size, len(base)),
+                         max(min_size, min(max_size, 3))}:
+                if min_size <= size <= max_size:
+                    pool = itertools.cycle(base)
+                    out.append([next(pool) for _ in range(size)])
+            return _Strategy(out or [base[:max_size]])
+
+    st = _St()
+
+    def given(**strategies):
+        # the cartesian product of sample grids (capped) — multi-argument
+        # properties must see off-diagonal combinations, not only cases
+        # where every argument takes the same grid value
+        names = list(strategies)
+
+        def deco(fn):
+            def run(*args):
+                combos = itertools.islice(
+                    itertools.product(
+                        *(strategies[n].samples for n in names)), 64)
+                for vals in combos:
+                    fn(*args, **dict(zip(names, vals)))
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+        return deco
+
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+        return deco

@@ -1,7 +1,11 @@
-"""Property-based tests for the contention models (PCCS, §3.3)."""
-import hypothesis.strategies as st
+"""Property-based tests for the contention models (PCCS, §3.3).
+
+Runs under hypothesis when installed; degrades to a deterministic example
+grid otherwise (see tests/_prop.py).
+"""
 import pytest
-from hypothesis import given, settings
+
+from _prop import given, settings, st
 
 from repro.core.contention import (PiecewiseModel, ProportionalShareModel,
                                    estimate_blackbox_demand, pccs_from_pairs)

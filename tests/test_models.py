@@ -1,12 +1,12 @@
 """Model-component unit tests: norms, rope, MoE dispatch, losses."""
 import dataclasses
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from _prop import given, settings, st
 
 from repro import configs
 from repro.models import moe as moe_mod
