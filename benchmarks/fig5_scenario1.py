@@ -8,9 +8,7 @@ contention making naive GPU&DLA not always better than GPU-only.
 """
 from __future__ import annotations
 
-from repro.core import api, solver_bb
-from repro.core.baselines import fastest_only, mensa_like, naive_concurrent
-from repro.core.simulate import simulate
+from repro.core import Scheduler
 
 from .common import emit, fmt_table, timed
 
@@ -20,22 +18,21 @@ FRAMES = 4      # consecutive images per instance (steady state)
 
 
 def main() -> list[dict]:
-    plat = api.resolve_platform("agx-orin")
-    model = api.default_model(plat)
+    sched = Scheduler("agx-orin")
     rows, out = [], []
     for dnn in DNNS:
-        graphs = api.resolve_graphs([dnn] * INSTANCES, plat)
+        graphs = sched.graphs([dnn] * INSTANCES)
         its = [FRAMES] * INSTANCES
         base = {}
-        for name, fn in (("gpu_only", fastest_only),
-                         ("gpu_dla", naive_concurrent),
-                         ("mensa", mensa_like)):
-            res = simulate(plat, fn(plat, graphs, iterations=its), model)
-            base[name] = res.throughput_fps
+        for label, name in (("gpu_only", "fastest_only"),
+                            ("gpu_dla", "naive_concurrent"),
+                            ("mensa", "mensa")):
+            _, res = sched.evaluate_baseline(name, graphs, iterations=its)
+            base[label] = res.throughput_fps
         with timed() as t:
-            sol = solver_bb.solve(plat, graphs, model, "throughput",
-                                  max_transitions=1, iterations=its)
-        hax = sol.result.throughput_fps
+            plan = sched.solve(graphs, "throughput", solver="bb",
+                               max_transitions=1, iterations=its)
+        hax = plan.result.throughput_fps
         best_name = max(base, key=base.get)
         impr = 100 * (hax / base[best_name] - 1)
         rows.append(dict(dnn=dnn, **{f"fps_{k}": v for k, v in base.items()},

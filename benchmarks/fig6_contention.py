@@ -7,7 +7,7 @@ schedule removes (paper: memory contention reduced by up to 45%).
 """
 from __future__ import annotations
 
-from repro.core import api, solver_z3
+from repro.core import Scheduler
 from repro.core.simulate import Workload, simulate
 
 from .common import emit, fmt_table, timed
@@ -17,15 +17,15 @@ CORUNNERS = ["caffenet", "resnet18", "resnet50", "resnet101", "resnet152",
 
 
 def main() -> list[dict]:
-    plat = api.resolve_platform("xavier-agx")
-    model = api.default_model(plat)
-    goog = api.resolve_graphs(["googlenet"], plat)[0]
+    sched = Scheduler("xavier-agx")
+    plat, model = sched.platform, sched.model
+    goog = sched.graphs(["googlenet"])[0]
     standalone = simulate(
         plat, [Workload(goog, ("GPU",) * len(goog))], model).makespan
 
     rows, out = [], []
     for other_name in CORUNNERS:
-        other = api.resolve_graphs([other_name], plat)[0]
+        other = sched.graphs([other_name])[0]
         if "DLA" not in other.accelerators:
             continue
         wls = [Workload(goog, ("GPU",) * len(goog)),
@@ -34,11 +34,11 @@ def main() -> list[dict]:
         goog_end = corun.finish_times[0]
         slowdown = goog_end / standalone
         with timed() as t:
-            sol = solver_z3.solve(plat, [goog, other], model, "latency",
-                                  max_transitions=2, deadline_s=20.0)
+            plan = sched.solve([goog, other], "latency",
+                               max_transitions=2, deadline_s=20.0)
         # contention wall-ms under naive co-run vs under the HaX-CoNN schedule
         naive_cont = corun.contention_ms
-        hax_cont = sol.result.contention_ms
+        hax_cont = plan.result.contention_ms
         reduction = (100 * (1 - hax_cont / naive_cont)
                      if naive_cont > 1e-9 else 0.0)
         rows.append(dict(corunner=other_name, slowdown=slowdown,

@@ -10,7 +10,7 @@ the statically-computed oracle optimum, and slower convergence for the
 """
 from __future__ import annotations
 
-from repro.core import api
+from repro.core import Scheduler
 from repro.core.dynamic import DHaXCoNN
 from repro.core.profiles import chain
 
@@ -25,16 +25,15 @@ CHECKPOINTS_S = (0.025, 0.1, 0.25, 0.5, 1.5, 4.0, 10.0)
 
 
 def main() -> list[dict]:
-    plat = api.resolve_platform("xavier-agx")
-    model = api.default_model(plat)
+    sched = Scheduler("xavier-agx")
+    plat, model = sched.platform, sched.model
     rows = []
     for label, spec in PHASES:
         if spec is None:
-            graphs = [chain(*api.resolve_graphs(["googlenet", "resnet152"],
-                                                plat)),
-                      api.resolve_graphs(["fcn-resnet18"], plat)[0]]
+            graphs = [chain(*sched.graphs(["googlenet", "resnet152"])),
+                      sched.graphs(["fcn-resnet18"])[0]]
         else:
-            graphs = api.resolve_graphs(spec, plat)
+            graphs = sched.graphs(spec)
         d = DHaXCoNN(plat, graphs, model, "latency", max_transitions=2)
         elapsed = 0.0
         samples = [("init", d.best.objective)]

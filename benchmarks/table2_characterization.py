@@ -7,16 +7,17 @@ cheaply, high-input groups demand more bandwidth.
 """
 from __future__ import annotations
 
-from repro.core import api
-from repro.core.profiles import TABLE2_GOOGLENET, get_graph
+from repro.core import Scheduler
+from repro.core.profiles import TABLE2_GOOGLENET
 
 from .common import emit, fmt_table, timed
 
 
 def main() -> list[dict]:
-    plat = api.resolve_platform("xavier-agx")
+    sched = Scheduler("xavier-agx")
+    plat = sched.platform
     with timed() as t:
-        g = get_graph("googlenet", plat)
+        g = sched.graphs(["googlenet"])[0]
     rows = []
     out = []
     for grp, pub in zip(g, TABLE2_GOOGLENET):

@@ -7,8 +7,8 @@ DNN equals the published number (no self-contention, no transitions).
 """
 from __future__ import annotations
 
-from repro.core import api
-from repro.core.profiles import TABLE5, get_graph
+from repro.core import Scheduler
+from repro.core.profiles import TABLE5
 from repro.core.simulate import Workload, simulate
 
 from .common import emit, fmt_table, timed
@@ -17,14 +17,15 @@ from .common import emit, fmt_table, timed
 def main() -> list[dict]:
     rows, out = [], []
     worst = 0.0
+    scheds = {name: Scheduler(name) for name in ("agx-orin", "xavier-agx")}
     with timed() as t:
         for dnn in sorted(TABLE5):
             row = {"dnn": dnn}
             for plat_name, cols in (("agx-orin", (0, 1)),
                                     ("xavier-agx", (2, 3))):
-                plat = api.resolve_platform(plat_name)
-                g = get_graph(dnn, plat)
-                model = api.default_model(plat)
+                sched = scheds[plat_name]
+                plat, model = sched.platform, sched.model
+                g = sched.graphs([dnn])[0]
                 for acc, col in zip(("GPU", "DLA"), cols):
                     pub = TABLE5[dnn][col]
                     if acc not in g.accelerators:

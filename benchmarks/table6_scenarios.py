@@ -12,10 +12,9 @@ semantics follow §5.2:
 """
 from __future__ import annotations
 
-from repro.core import api, solver_z3
-from repro.core.baselines import BASELINES
+from repro.core import Scheduler
 from repro.core.profiles import chain, get_graph
-from repro.core.simulate import simulate
+from repro.core.scheduler import failed
 
 from .common import emit, fmt_table, timed
 
@@ -55,23 +54,21 @@ def build(plat, spec, scenario):
 
 def run_experiment(no: int) -> dict:
     plat_name, objective, spec, scenario, p_lat, p_fps = EXPERIMENTS[no]
-    plat = api.resolve_platform(plat_name)
-    model = api.default_model(plat)
-    graphs, deps, its = build(plat, spec, scenario)
+    sched = Scheduler(plat_name)
+    graphs, deps, its = build(sched.platform, spec, scenario)
 
-    base_rows = {}
-    for name, fn in BASELINES.items():
-        try:
-            wls = fn(plat, graphs, iterations=its, depends_on=deps)
-            res = simulate(plat, wls, model)
-            base_rows[name] = res
-        except (ValueError, KeyError):
-            base_rows[name] = None
     with timed() as t:
-        sol = solver_z3.solve(plat, graphs, model, objective=objective,
-                              max_transitions=2, iterations=its,
-                              depends_on=deps, deadline_s=30.0)
-    usable = {k: v for k, v in base_rows.items() if v is not None}
+        rows = sched.compare(graphs, objective, max_transitions=2,
+                             iterations=its, depends_on=deps,
+                             deadline_s=30.0)
+    plan = rows.pop("haxconn")
+    if failed(plan):
+        raise RuntimeError(f"exp {no}: solver failed: {plan['error']}")
+    sol = plan.solution
+    # structured per-row failure reasons: "infeasible" vs "crashed" is now
+    # visible in the benchmark output instead of a silent None.
+    errors = {k: v["error"] for k, v in rows.items() if failed(v)}
+    usable = {k: v for k, v in rows.items() if not failed(v)}
     best_name = min(usable, key=lambda k: usable[k].objective(objective))
     best = usable[best_name]
     lat_impr = 100 * (1 - sol.result.latency_ms / best.latency_ms)
@@ -85,6 +82,9 @@ def run_experiment(no: int) -> dict:
         lat_impr=lat_impr, fps_impr=fps_impr,
         paper_lat_impr=p_lat, paper_fps_impr=p_fps,
         optimal=sol.optimal, solver_s=t["s"],
+        solver=plan.solver, solve_s=plan.solve_time_s,
+        plan_hash=plan.request_hash,
+        baseline_errors=errors,
         assignments=[list(a) for a in sol.assignments],
     )
 
@@ -101,7 +101,10 @@ def main() -> list[dict]:
                     f"{r['paper_lat_impr']}%", f"{r['fps_impr']:+.0f}%",
                     f"{r['paper_fps_impr']}%",
                     "opt" if r["optimal"] else "time",
-                    f"{r['solver_s']:.1f}s"])
+                    f"{r['solver']}:{r['solve_s']:.1f}s"])
+        for name, err in r["baseline_errors"].items():
+            print(f"  exp{no}: baseline {name} failed "
+                  f"({err['type']}): {err['message']}")
         emit(f"table6.exp{no}", r["solver_s"] * 1e6,
              f"lat_impr={r['lat_impr']:.1f}%;paper={r['paper_lat_impr']}%;"
              f"fps_impr={r['fps_impr']:.1f}%;paper_fps={r['paper_fps_impr']}%")

@@ -9,7 +9,7 @@ exact-simulator evaluations (the work actually stealing CPU cycles).
 """
 from __future__ import annotations
 
-from repro.core import api, solver_z3
+from repro.core import Scheduler
 
 from .common import emit, fmt_table, timed
 
@@ -23,19 +23,20 @@ PAIRS = [
 
 
 def main() -> list[dict]:
-    plat = api.resolve_platform("agx-orin")
-    model = api.default_model(plat)
+    sched = Scheduler("agx-orin")
     rows, out = [], []
     worst = 0.0
     for a, b in PAIRS:
-        graphs = api.resolve_graphs([a, b], plat)
         with timed() as t:
-            sol = solver_z3.solve(plat, graphs, model, "latency",
-                                  max_transitions=2, deadline_s=30.0)
+            plan = sched.solve([a, b], "latency", max_transitions=2,
+                               deadline_s=30.0)
+        sol = plan.solution
         worst = max(worst, t["s"])
         rows.append(dict(pair=f"{a}+{b}", solver_s=t["s"],
+                         solver=plan.solver,
                          evaluated=sol.evaluated, optimal=sol.optimal))
-        out.append([f"{a}+{b}", f"{t['s']:.2f}s", sol.evaluated,
+        out.append([f"{a}+{b}", f"{t['s']:.2f}s ({plan.solver})",
+                    sol.evaluated,
                     "opt" if sol.optimal else "timeout"])
         emit(f"table7.solve.{b}", t["us"],
              f"evaluated={sol.evaluated};optimal={sol.optimal}")

@@ -12,10 +12,8 @@ from __future__ import annotations
 
 import itertools
 
-from repro.core import api, solver_bb
-from repro.core.baselines import BASELINES
+from repro.core import Scheduler, registry
 from repro.core.profiles import DNN_SET
-from repro.core.simulate import simulate
 
 from .common import emit, fmt_table, timed
 
@@ -26,34 +24,33 @@ def balanced_iterations(plat, graphs) -> list[int]:
     return [max(1, round(slow / t)) for t in times]
 
 
-def run_pair(plat, model, a: str, b: str) -> dict:
-    graphs = api.resolve_graphs([a, b], plat)
-    its = balanced_iterations(plat, graphs)
+def run_pair(sched: Scheduler, a: str, b: str) -> dict:
+    graphs = sched.graphs([a, b])
+    its = balanced_iterations(sched.platform, graphs)
     base = {}
-    for name, fn in BASELINES.items():
+    for name in registry.baseline_names():
         try:
-            res = simulate(plat, fn(plat, graphs, iterations=its), model)
+            _, res = sched.evaluate_baseline(name, graphs, iterations=its)
             base[name] = res.throughput_fps
         except (ValueError, KeyError):
             pass
     best_name = max(base, key=base.get)
-    sol = solver_bb.solve(plat, graphs, model, "throughput",
-                          max_transitions=1, iterations=its)
-    impr = sol.result.throughput_fps / base[best_name]
+    plan = sched.solve(graphs, "throughput", solver="bb",
+                       max_transitions=1, iterations=its)
+    impr = plan.result.throughput_fps / base[best_name]
     return dict(pair=(a, b), iters=its, best_baseline=best_name,
-                base_fps=base[best_name], hax_fps=sol.result.throughput_fps,
+                base_fps=base[best_name], hax_fps=plan.result.throughput_fps,
                 impr=impr,
                 hax_uses_dsa=any("DLA" in w.assignment
-                                 for w in sol.workloads))
+                                 for w in plan.solution.workloads))
 
 
 def main() -> list[dict]:
-    plat = api.resolve_platform("agx-orin")
-    model = api.default_model(plat)
+    sched = Scheduler("agx-orin")
     rows = []
     with timed() as t:
         for a, b in itertools.combinations(DNN_SET, 2):
-            rows.append(run_pair(plat, model, a, b))
+            rows.append(run_pair(sched, a, b))
     improved = sum(1 for r in rows if r["impr"] > 1.005)
     never_worse = all(r["impr"] >= 1 - 1e-9 for r in rows)
     vgg_rows = [r for r in rows if "vgg19" in r["pair"]]

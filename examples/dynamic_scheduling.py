@@ -7,7 +7,7 @@ optimum.
 
     PYTHONPATH=src python examples/dynamic_scheduling.py
 """
-from repro.core import api
+from repro.core import Scheduler
 from repro.core.dynamic import DHaXCoNN
 
 PHASES = [
@@ -18,10 +18,10 @@ PHASES = [
 
 
 def main():
-    plat = api.resolve_platform("xavier-agx")
-    model = api.default_model(plat)
+    sched = Scheduler("xavier-agx")
+    plat, model = sched.platform, sched.model
     for label, dnns in PHASES:
-        graphs = api.resolve_graphs(dnns, plat)
+        graphs = sched.graphs(dnns)
         d = DHaXCoNN(plat, graphs, model, "latency", max_transitions=2)
         print(f"\n== CFG change -> {label}")
         print(f"   initial (best naive): {d.best.objective:7.2f} ms")

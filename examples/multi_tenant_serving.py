@@ -42,6 +42,10 @@ def main():
         platform=platform, memory_budget_bytes=budget,
         patience=2, cooldown=4))
     print(gw.plan.summary())
+    art = gw.plan.plan
+    print(f"  plan artifact {art.request_hash[:12]}: solver={art.solver}, "
+          f"solve={art.solve_time_s:.2f}s — gw.plan.plan.save(path) "
+          f"persists it for cold-start boots (--plan in repro.launch.serve)")
     assert gw.plan.speedup_vs_round_robin > 1.0, \
         "contention-aware plan must beat round-robin"
 

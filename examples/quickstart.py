@@ -1,33 +1,51 @@
-"""Quickstart: the paper's Fig. 1 case study in four lines of API.
+"""Quickstart: the paper's Fig. 1 case study through the Scheduler API.
 
 Runs VGG-19 + ResNet101 concurrently on the Xavier AGX profile and shows
 Case 1 (serial GPU), Case 2 (naive GPU&DLA), and Case 3 (HaX-CoNN optimal
-layer-level schedule), then the same planner applied to two LLMs co-served
-on a split TPU v5e pod.
+layer-level schedule); serializes the winning Plan, reloads it from JSON
+(a cache hit — no second solve), then applies the same planner to two LLMs
+co-served on a split TPU v5e pod.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import api
+from repro.core import Plan, Scheduler
+from repro.core.scheduler import failed
 
 
 def soc_case_study():
     print("=" * 70)
     print("Fig. 1 case study: VGG-19 + ResNet101 on NVIDIA Xavier AGX")
     print("=" * 70)
-    rows = api.compare(["vgg19", "resnet101"], platform="xavier-agx",
-                       objective="latency", deadline_s=15.0)
+    sched = Scheduler("xavier-agx")
+    rows = sched.compare(["vgg19", "resnet101"], objective="latency",
+                         deadline_s=15.0)
     for name in ("fastest_only", "naive_concurrent", "mensa", "herald",
                  "h2h"):
         res = rows[name]
-        if res is not None:
+        if failed(res):
+            print(f"  {name:18s} infeasible: {res['error']['message']}")
+        else:
             print(f"  {name:18s} latency={res.latency_ms:6.2f} ms   "
                   f"fps={res.throughput_fps:6.1f}")
-    sol = rows["haxconn"]
+    plan = rows["haxconn"]
+    if failed(plan):
+        raise SystemExit(f"solver failed: {plan['error']['message']}")
+    sol = plan.solution
     print(f"  {'HaX-CoNN':18s} latency={sol.result.latency_ms:6.2f} ms   "
           f"fps={sol.result.throughput_fps:6.1f}   "
-          f"(certified optimal: {sol.optimal})")
+          f"(certified optimal: {sol.optimal}, solver: {plan.solver}, "
+          f"{plan.solve_time_s:.2f}s)")
     for wl in sol.workloads:
         print(f"    {wl.graph.name:12s} -> {' '.join(wl.assignment)}")
+
+    # the schedule is an artifact: persist, reload, and re-request — the
+    # reloaded plan drives the scheduler's cache, so no second solve.
+    blob = plan.to_json()
+    sched2 = Scheduler("xavier-agx")
+    sched2.cache.add(Plan.from_json(blob))
+    again = sched2.solve(["vgg19", "resnet101"], "latency", deadline_s=15.0)
+    print(f"  reloaded plan {again.request_hash[:12]} from JSON: "
+          f"{again.assignments} (solver invocations: {sched2.solves})")
 
 
 def pod_case_study():

@@ -3,11 +3,21 @@
 Reproduces "Shared Memory-contention-aware Concurrent DNN Execution for
 Diversely Heterogeneous System-on-Chips" (Dagli & Belviranli, 2023) and
 generalizes it to TPU-pod virtual accelerators.
+
+Primary entry points: :class:`Scheduler` (solve/compare against a resolved
+platform), :class:`ScheduleRequest` (one validated problem description),
+:class:`Plan` (serializable schedule artifact) and :class:`PlanCache`
+(content-addressed store).  Solvers, contention models and baselines are
+pluggable through :mod:`repro.core.registry`.
 """
+from . import registry
 from .accelerators import PLATFORMS, Accelerator, Platform
 from .contention import (PiecewiseModel, ProportionalShareModel,
                          estimate_blackbox_demand, pccs_from_pairs)
 from .graph import DNNGraph, LayerGroup
+from .plan import Plan, PlanCache, ScheduleRequest
+from .scheduler import (DEFAULT_POD_MODEL, DEFAULT_SOC_MODEL, Scheduler,
+                        default_model, resolve_graphs, resolve_platform)
 from .simulate import Interval, SimResult, Workload, simulate
 from .solver_bb import Solution
 
@@ -18,4 +28,8 @@ __all__ = [
     "DNNGraph", "LayerGroup",
     "Interval", "SimResult", "Workload", "simulate",
     "Solution",
+    "Plan", "PlanCache", "ScheduleRequest", "Scheduler",
+    "DEFAULT_POD_MODEL", "DEFAULT_SOC_MODEL",
+    "default_model", "resolve_graphs", "resolve_platform",
+    "registry",
 ]

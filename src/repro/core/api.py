@@ -1,53 +1,69 @@
-"""High-level facade: one call from (DNNs, platform, objective) to a schedule.
+"""DEPRECATED facade — thin shims over the Scheduler/Plan object API.
 
-    from repro.core import api
-    sol = api.schedule(["vgg19", "resnet152"], platform="xavier-agx",
-                       objective="latency")
-    print(sol.assignments, sol.result.latency_ms)
+New code should use :class:`repro.core.Scheduler` directly:
 
-Accepts either paper-profile DNN names or pre-built :class:`DNNGraph`s (e.g.
-exported from a JAX model via :mod:`repro.models.graph_export`).
+    from repro.core import Scheduler
+    sched = Scheduler("xavier-agx")
+    plan = sched.solve(["vgg19", "resnet152"], objective="latency")
+    print(plan.assignments, plan.result.latency_ms, plan.solver)
+
+The free functions below keep the historical call shape (``schedule`` /
+``evaluate_baseline`` / ``compare`` returning bare ``Solution`` /
+``SimResult`` objects) and delegate to one *shared* Scheduler per
+(platform, model), so repeated calls hit its plan cache.  They emit
+:class:`DeprecationWarning` and will be removed once every caller has
+migrated (see docs/api.md for the migration table).
 """
 from __future__ import annotations
 
-from typing import Mapping, Sequence
+import warnings
+from typing import Sequence
 
-from . import baselines as _baselines
-from . import solver_z3
-from .accelerators import PLATFORMS, Platform
-from .contention import ContentionModel, ProportionalShareModel
+from .contention import ContentionModel
 from .graph import DNNGraph
-from .profiles import get_graph
-from .simulate import SimResult, Workload, simulate
+from .plan import PlanCache, platform_fingerprint
+from .scheduler import (DEFAULT_POD_MODEL, DEFAULT_SOC_MODEL, Scheduler,
+                        default_model, failed, resolve_graphs,
+                        resolve_platform)
+from .simulate import SimResult, Workload
 from .solver_bb import Solution
 
-#: calibrated default for the SoC EMC domains — reproduces the paper's
-#: observed co-run slowdown magnitudes (up to ~70% performance loss, §5.2)
-#: at the Table-2 demand levels.
-DEFAULT_SOC_MODEL = ProportionalShareModel(capacity=1.0, sensitivity=3.0)
-#: ICI over-subscription is served fairly by the fabric; no extra sensitivity.
-DEFAULT_POD_MODEL = ProportionalShareModel(capacity=1.0, sensitivity=1.0)
+__all__ = [
+    "DEFAULT_POD_MODEL", "DEFAULT_SOC_MODEL",
+    "resolve_platform", "default_model", "resolve_graphs", "failed",
+    "schedule", "evaluate_baseline", "compare", "shared_scheduler",
+]
+
+_SCHEDULERS: dict[object, Scheduler] = {}
 
 
-def resolve_platform(platform: str | Platform) -> Platform:
-    if isinstance(platform, Platform):
-        return platform
-    return PLATFORMS[platform]()
+def shared_scheduler(platform: str | "Platform" = "agx-orin",
+                     model: ContentionModel | None = None) -> Scheduler:
+    """The process-wide Scheduler the deprecated shims delegate to."""
+    plat = resolve_platform(platform)
+    try:
+        key = (platform_fingerprint(plat), model)
+        hash(key)
+    except TypeError:            # unhashable custom model: no sharing
+        return Scheduler(plat, model)
+    sched = _SCHEDULERS.get(key)
+    if sched is None:
+        # bounded: a long-lived process funnels every legacy call through
+        # these shared schedulers, so their caches must not grow forever.
+        sched = _SCHEDULERS[key] = Scheduler(
+            plat, model, cache=PlanCache(max_entries=256))
+    return sched
 
 
-def default_model(platform: Platform) -> ContentionModel:
-    return DEFAULT_POD_MODEL if "ICI" in platform.domains else DEFAULT_SOC_MODEL
-
-
-def resolve_graphs(dnns: Sequence[str | DNNGraph],
-                   platform: Platform) -> list[DNNGraph]:
-    return [d if isinstance(d, DNNGraph) else get_graph(d, platform)
-            for d in dnns]
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.api.{old} is deprecated; use {new} "
+        f"(see docs/api.md)", DeprecationWarning, stacklevel=3)
 
 
 def schedule(
     dnns: Sequence[str | DNNGraph],
-    platform: str | Platform = "agx-orin",
+    platform="agx-orin",
     objective: str = "latency",
     model: ContentionModel | None = None,
     max_transitions: int | None = 3,
@@ -55,53 +71,53 @@ def schedule(
     depends_on: Sequence[int | None] | None = None,
     deadline_s: float | None = None,
 ) -> Solution:
-    """HaX-CoNN optimal contention-aware schedule (CEGAR + exact simulator)."""
-    plat = resolve_platform(platform)
-    graphs = resolve_graphs(dnns, plat)
-    m = model or default_model(plat)
-    return solver_z3.solve(plat, graphs, m, objective=objective,
-                           max_transitions=max_transitions,
-                           iterations=iterations, depends_on=depends_on,
-                           deadline_s=deadline_s)
+    """Deprecated: ``Scheduler(platform).solve(dnns, objective, ...)``."""
+    _deprecated("schedule", "Scheduler.solve")
+    plan = shared_scheduler(platform, model).solve(
+        dnns, objective, max_transitions=max_transitions,
+        iterations=iterations, depends_on=depends_on, deadline_s=deadline_s)
+    return plan.solution
 
 
 def evaluate_baseline(
     name: str,
     dnns: Sequence[str | DNNGraph],
-    platform: str | Platform = "agx-orin",
+    platform="agx-orin",
     model: ContentionModel | None = None,
     iterations: Sequence[int] | None = None,
     depends_on: Sequence[int | None] | None = None,
 ) -> tuple[list[Workload], SimResult]:
-    """Evaluate one named baseline under the exact contention simulator."""
-    plat = resolve_platform(platform)
-    graphs = resolve_graphs(dnns, plat)
-    m = model or default_model(plat)
-    wls = _baselines.BASELINES[name](plat, graphs, iterations=iterations,
-                                     depends_on=depends_on)
-    return wls, simulate(plat, wls, m)
+    """Deprecated: ``Scheduler(platform).evaluate_baseline(name, dnns)``."""
+    _deprecated("evaluate_baseline", "Scheduler.evaluate_baseline")
+    return shared_scheduler(platform, model).evaluate_baseline(
+        name, dnns, iterations=iterations, depends_on=depends_on)
 
 
 def compare(
     dnns: Sequence[str | DNNGraph],
-    platform: str | Platform = "agx-orin",
+    platform="agx-orin",
     objective: str = "latency",
     model: ContentionModel | None = None,
     iterations: Sequence[int] | None = None,
     depends_on: Sequence[int | None] | None = None,
     deadline_s: float | None = 20.0,
 ) -> dict[str, object]:
-    """HaX-CoNN vs. every baseline — the shape of the paper's Table 6 rows."""
-    plat = resolve_platform(platform)
-    rows: dict[str, object] = {}
-    for name in _baselines.BASELINES:
-        try:
-            _, res = evaluate_baseline(name, dnns, plat, model,
-                                       iterations, depends_on)
-            rows[name] = res
-        except (ValueError, KeyError):
-            rows[name] = None
-    sol = schedule(dnns, plat, objective, model, iterations=iterations,
-                   depends_on=depends_on, deadline_s=deadline_s)
-    rows["haxconn"] = sol
+    """Deprecated: ``Scheduler(platform).compare(dnns, objective, ...)``.
+
+    Row shape is preserved except that a failing baseline is now a
+    structured ``{"error": {"type", "message"}}`` dict instead of a silent
+    ``None`` (check with :func:`repro.core.scheduler.failed`).  The
+    ``"haxconn"`` row stays a bare :class:`Solution`, and — as before the
+    redesign — a solver failure raises instead of appearing as a row.
+    """
+    _deprecated("compare", "Scheduler.compare")
+    rows = shared_scheduler(platform, model).compare(
+        dnns, objective, iterations=iterations, depends_on=depends_on,
+        deadline_s=deadline_s)
+    hax = rows["haxconn"]
+    if failed(hax):
+        err = hax["error"]
+        raise RuntimeError(
+            f"schedule solve failed ({err['type']}): {err['message']}")
+    rows["haxconn"] = hax.solution
     return rows

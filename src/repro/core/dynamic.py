@@ -29,6 +29,9 @@ except ImportError:  # pragma: no cover
 from .accelerators import Platform
 from .contention import ContentionModel
 from .graph import DNNGraph
+from .plan import Plan, ScheduleRequest
+from .registry import (decode_model, encode_model,
+                       register_contention_model)
 from .simulate import Workload, simulate
 from .solver_bb import Solution
 from .solver_z3 import _EPS, _Encoding, _incumbent
@@ -202,3 +205,53 @@ class ScaledContentionModel:
 
     def slowdown(self, own: float, external: float) -> float:
         return 1.0 + self.factor * (self.base.slowdown(own, external) - 1.0)
+
+
+register_contention_model(
+    "scaled", ScaledContentionModel,
+    encode=lambda m: {"factor": m.factor, "base": encode_model(m.base)},
+    decode=lambda cfg: ScaledContentionModel(
+        decode_model(cfg["base"]), cfg["factor"]))
+
+
+def quantize_severity(factor: float) -> float:
+    """Snap an observed slowdown factor to 1/16 steps (>= 1).
+
+    Severity resolution no schedule is sensitive to, but coarse enough
+    that re-solves at recurring severities are plan-cache hits.
+    """
+    return max(1.0, round(factor * 16.0) / 16.0)
+
+
+def reschedule_plan(scheduler, graphs: Sequence[DNNGraph],
+                    observed_factor: float, *,
+                    objective: str = "latency",
+                    max_transitions: int | None = 3,
+                    iterations: Sequence[int] | None = None,
+                    depends_on: Sequence[int | None] | None = None,
+                    budget_s: float = 0.5) -> Plan:
+    """§4.4 runtime re-solve, routed through ``Scheduler.resolve``.
+
+    The monitor's observed severity rescales the scheduler's base contention
+    model (:class:`ScaledContentionModel`) and the bounded re-solve goes
+    through the normal resolve path, so repeated re-schedules at similar
+    severity are plan-cache hits and every re-solve is logged/persisted
+    uniformly with offline solves.  The continuously-valued EWMA factor is
+    quantized (:func:`quantize_severity`) so recurring deviations actually
+    share cache entries instead of minting a new plan per float; callers
+    comparing an incumbent against the result must price the incumbent at
+    the same quantized severity.
+    """
+    observed_factor = quantize_severity(observed_factor)
+    model = ScaledContentionModel(scheduler.model, observed_factor)
+    request = ScheduleRequest(
+        graphs=tuple(graphs),
+        platform=scheduler.platform,
+        model=model,
+        objective=objective,
+        max_transitions=max_transitions,
+        iterations=tuple(iterations or ()),
+        depends_on=tuple(depends_on or ()),
+        deadline_s=budget_s,
+    )
+    return scheduler.resolve(request)

@@ -1,0 +1,294 @@
+"""Entry-point-style registries for solvers, contention models and baselines.
+
+The Scheduler/Plan API (:mod:`repro.core.scheduler`, :mod:`repro.core.plan`)
+never hard-codes a solver module: every schedule is produced by a *named*
+solver entry looked up here, every serialized plan records which entry
+produced it, and contention models round-trip through named codecs so a
+:class:`~repro.core.plan.Plan` artifact is self-describing.  Third-party
+backends register themselves at import time exactly like the built-ins
+below:
+
+    from repro.core import registry
+
+    @registry.register_solver("ilp", priority=5,
+                              available=lambda: HAVE_PULP)
+    def solve_ilp(platform, graphs, model, *, objective, max_transitions,
+                  iterations, depends_on, deadline_s):
+        ...
+        return Solution(...)
+
+``solver="auto"`` resolves to the best *available* entry by ascending
+priority and degrades down the list when an entry raises ``ValueError``
+(e.g. the exhaustive search space is too large): z3 -> bb -> greedy with the
+built-ins.
+"""
+from __future__ import annotations
+
+import logging
+import re
+from collections import abc as _abc
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping
+
+from . import baselines as _baselines
+from . import solver_bb, solver_greedy, solver_z3
+from .contention import PiecewiseModel, ProportionalShareModel
+from .solver_bb import Solution
+
+AUTO = "auto"
+
+
+class SolverUnavailable(RuntimeError):
+    """A solver entry exists but its backend is not importable here."""
+
+
+# ---------------------------------------------------------------------------
+# solvers
+# ---------------------------------------------------------------------------
+
+#: uniform solver signature: ``fn(platform, graphs, model, *, objective,
+#: max_transitions, iterations, depends_on, deadline_s) -> Solution``.
+SolverFn = Callable[..., Solution]
+
+
+@dataclass(frozen=True)
+class SolverEntry:
+    name: str
+    fn: SolverFn
+    #: probed at dispatch time — an entry may be registered unconditionally
+    #: while its backend (z3, ...) is an optional dependency.
+    available: Callable[[], bool]
+    #: ascending preference order for ``solver="auto"``.
+    priority: int
+    description: str = ""
+
+
+_SOLVERS: dict[str, SolverEntry] = {}
+
+
+def register_solver(name: str, *, priority: int = 100,
+                    available: Callable[[], bool] = lambda: True,
+                    description: str = "",
+                    replace: bool = False) -> Callable[[SolverFn], SolverFn]:
+    """Decorator registering a solver entry under ``name``."""
+
+    def deco(fn: SolverFn) -> SolverFn:
+        if name in _SOLVERS and not replace:
+            raise ValueError(f"solver {name!r} already registered")
+        _SOLVERS[name] = SolverEntry(name, fn, available, priority,
+                                     description or (fn.__doc__ or ""))
+        return fn
+
+    return deco
+
+
+def solver_names() -> tuple[str, ...]:
+    """Registered solver names in auto-dispatch (priority) order."""
+    return tuple(e.name for e in
+                 sorted(_SOLVERS.values(), key=lambda e: e.priority))
+
+
+def get_solver(name: str) -> SolverEntry:
+    """Look up one entry; raises with the known names on a typo."""
+    try:
+        return _SOLVERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown solver {name!r}; registered solvers: "
+            f"{', '.join(solver_names())} (or {AUTO!r})") from None
+
+
+def auto_order() -> tuple[SolverEntry, ...]:
+    """Available entries in the order ``solver="auto"`` tries them."""
+    return tuple(e for e in sorted(_SOLVERS.values(),
+                                   key=lambda e: e.priority)
+                 if e.available())
+
+
+def dispatch_order(name: str) -> tuple[SolverEntry, ...]:
+    """Entries to try for a requested solver name (length 1 unless auto)."""
+    if name == AUTO:
+        order = auto_order()
+        if not order:
+            raise SolverUnavailable("no solver backend is available")
+        return order
+    entry = get_solver(name)
+    if not entry.available():
+        raise SolverUnavailable(
+            f"solver {name!r} is registered but its backend is not "
+            f"available (available: "
+            f"{', '.join(e.name for e in auto_order()) or 'none'})")
+    return (entry,)
+
+
+@register_solver("z3", priority=0,
+                 available=lambda: solver_z3.HAVE_Z3,
+                 description="CEGAR-optimal via Z3 + exact simulator (§3.4)")
+def _solve_z3(platform, graphs, model, *, objective, max_transitions,
+              iterations, depends_on, deadline_s) -> Solution:
+    return solver_z3.solve(platform, graphs, model, objective=objective,
+                           max_transitions=max_transitions,
+                           iterations=iterations, depends_on=depends_on,
+                           deadline_s=deadline_s)
+
+
+@register_solver("bb", priority=10,
+                 description="exact branch-and-bound (pure Python)")
+def _solve_bb(platform, graphs, model, *, objective, max_transitions,
+              iterations, depends_on, deadline_s) -> Solution:
+    # bb has no deadline (it is exact or refuses); None transitions = full
+    # space, bounded by the longest chain.
+    mt = (max(len(g) for g in graphs) if max_transitions is None
+          else max_transitions)
+    return solver_bb.solve(platform, graphs, model, objective, mt,
+                           iterations, depends_on)
+
+
+@register_solver("greedy", priority=20,
+                 description="best baseline + simulator-scored hill climb")
+def _solve_greedy(platform, graphs, model, *, objective, max_transitions,
+                  iterations, depends_on, deadline_s) -> Solution:
+    return solver_greedy.solve(platform, graphs, model, objective=objective,
+                               max_transitions=max_transitions,
+                               iterations=iterations, depends_on=depends_on)
+
+
+# ---------------------------------------------------------------------------
+# contention-model codecs (Plan serialization)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelCodec:
+    name: str
+    cls: type
+    encode: Callable[[Any], dict]
+    decode: Callable[[Mapping[str, Any]], Any]
+
+
+_MODEL_CODECS: dict[str, ModelCodec] = {}
+
+
+def register_contention_model(name: str, cls: type, *,
+                              encode: Callable[[Any], dict] | None = None,
+                              decode: Callable[..., Any] | None = None,
+                              replace: bool = False) -> None:
+    """Register a named (encode, decode) codec for a contention-model class.
+
+    Defaults assume a flat dataclass: encode via ``vars()`` of the public
+    fields, decode via ``cls(**cfg)``.
+    """
+    if name in _MODEL_CODECS and not replace:
+        raise ValueError(f"contention model {name!r} already registered")
+    enc = encode or (lambda m: {
+        k: v for k, v in vars(m).items() if not k.startswith("_")})
+    dec = decode or (lambda cfg: cls(**cfg))
+    _MODEL_CODECS[name] = ModelCodec(name, cls, enc, dec)
+
+
+def contention_model_names() -> tuple[str, ...]:
+    return tuple(sorted(_MODEL_CODECS))
+
+
+#: kind recorded for models without a codec: the plan still solves, hashes
+#: and caches in-process, but the artifact refuses to deserialize.
+OPAQUE_MODEL = "opaque"
+
+_log = logging.getLogger("repro.core.registry")
+_OPAQUE_WARNED: set[str] = set()
+
+
+def encode_model(model: Any) -> dict:
+    """Serialize a contention model to ``{"kind": ..., **params}``.
+
+    Per-domain model mappings (``{"EMC": model, ...}``, accepted everywhere
+    a single model is) encode recursively.  A model class without a
+    registered codec encodes as an *opaque* fingerprint — deterministic
+    (dataclass ``repr``) so request hashing and in-process plan caching
+    keep working, but :func:`decode_model` refuses it: register a codec to
+    make such plans round-trip through JSON.
+    """
+    if isinstance(model, _abc.Mapping):
+        return {"kind": "per-domain",
+                "domains": {k: encode_model(v)
+                            for k, v in sorted(model.items())}}
+    for codec in _MODEL_CODECS.values():
+        if type(model) is codec.cls:
+            return {"kind": codec.name, **codec.encode(model)}
+    fingerprint = repr(model)
+    if re.search(r" at 0x[0-9a-f]+>", fingerprint):
+        # default object repr embeds the instance address: equal-valued
+        # models hash differently, so caching silently degrades to per-
+        # instance.  Correct (no wrong hits) but worth flagging once.
+        name = type(model).__name__
+        if name not in _OPAQUE_WARNED:
+            _OPAQUE_WARNED.add(name)
+            _log.warning(
+                "contention model %s has neither a registered codec nor a "
+                "value-based __repr__; plan caching is per-instance only — "
+                "register a codec with register_contention_model(...)", name)
+    return {"kind": OPAQUE_MODEL, "type": type(model).__name__,
+            "repr": fingerprint}
+
+
+def decode_model(cfg: Mapping[str, Any]) -> Any:
+    """Inverse of :func:`encode_model`."""
+    cfg = dict(cfg)
+    kind = cfg.pop("kind")
+    if kind == "per-domain":
+        return {k: decode_model(v) for k, v in cfg["domains"].items()}
+    if kind == OPAQUE_MODEL:
+        raise TypeError(
+            f"this plan was solved with contention model {cfg['type']!r} "
+            f"which has no registered codec; call "
+            f"registry.register_contention_model(...) for it (before "
+            f"solving) to make its plans deserializable")
+    if kind not in _MODEL_CODECS:
+        # built-in codecs that live outside core.contention register on
+        # import of their home module — pull it in before giving up.
+        from . import dynamic  # noqa: F401  (registers "scaled")
+    if kind not in _MODEL_CODECS:
+        raise KeyError(
+            f"unknown contention model kind {kind!r}; registered: "
+            f"{', '.join(contention_model_names())} — import the module "
+            f"that registers it before loading this plan")
+    return _MODEL_CODECS[kind].decode(cfg)
+
+
+register_contention_model(
+    "proportional", ProportionalShareModel,
+    encode=lambda m: {"capacity": m.capacity, "sensitivity": m.sensitivity})
+register_contention_model(
+    "piecewise", PiecewiseModel,
+    encode=lambda m: {"own_knots": list(m.own_knots),
+                      "ext_knots": list(m.ext_knots),
+                      "table": [list(r) for r in m.table]},
+    decode=lambda cfg: PiecewiseModel(
+        tuple(cfg["own_knots"]), tuple(cfg["ext_knots"]),
+        tuple(tuple(r) for r in cfg["table"])))
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+_BASELINES: dict[str, Callable] = dict(_baselines.BASELINES)
+
+
+def register_baseline(name: str, fn: Callable, *,
+                      replace: bool = False) -> None:
+    if name in _BASELINES and not replace:
+        raise ValueError(f"baseline {name!r} already registered")
+    _BASELINES[name] = fn
+
+
+def baseline_names() -> tuple[str, ...]:
+    return tuple(_BASELINES)
+
+
+def get_baseline(name: str) -> Callable:
+    try:
+        return _BASELINES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown baseline {name!r}; registered baselines: "
+            f"{', '.join(baseline_names())}") from None

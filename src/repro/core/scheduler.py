@@ -1,0 +1,209 @@
+"""The Scheduler object API: resolved platform + model -> cached Plans.
+
+One :class:`Scheduler` owns a resolved :class:`~repro.core.accelerators.
+Platform`, a default contention model and a :class:`~repro.core.plan.
+PlanCache`; every schedule it produces is a :class:`~repro.core.plan.Plan`
+with provenance, produced by a named registry solver entry and cached by
+request content hash — repeated ``solve()`` calls for the same problem are
+O(1) and re-schedules triggered at runtime (§4.4) are cached and logged
+through the same path.
+
+    from repro.core import Scheduler
+
+    sched = Scheduler("xavier-agx")
+    plan = sched.solve(["vgg19", "resnet152"], objective="latency")
+    plan.save("artifacts/plans/vgg-resnet.json")   # pre-solve offline
+    rows = sched.compare(["vgg19", "resnet152"])   # Table-6 shaped
+
+The legacy free functions in :mod:`repro.core.api` are thin deprecated
+shims over one shared Scheduler per (platform, model).
+"""
+from __future__ import annotations
+
+import logging
+import time
+from typing import Sequence
+
+from . import registry
+from .accelerators import PLATFORMS, Platform
+from .contention import ContentionModel, ProportionalShareModel
+from .graph import DNNGraph
+from .plan import (Plan, PlanCache, ScheduleRequest, platform_fingerprint)
+from .profiles import get_graph
+from .simulate import SimResult, Workload, simulate
+
+log = logging.getLogger("repro.core.scheduler")
+
+#: calibrated default for the SoC EMC domains — reproduces the paper's
+#: observed co-run slowdown magnitudes (up to ~70% performance loss, §5.2)
+#: at the Table-2 demand levels.
+DEFAULT_SOC_MODEL = ProportionalShareModel(capacity=1.0, sensitivity=3.0)
+#: ICI over-subscription is served fairly by the fabric; no extra sensitivity.
+DEFAULT_POD_MODEL = ProportionalShareModel(capacity=1.0, sensitivity=1.0)
+
+
+def resolve_platform(platform: str | Platform) -> Platform:
+    if isinstance(platform, Platform):
+        return platform
+    return PLATFORMS[platform]()
+
+
+def default_model(platform: Platform) -> ContentionModel:
+    return DEFAULT_POD_MODEL if "ICI" in platform.domains else DEFAULT_SOC_MODEL
+
+
+def resolve_graphs(dnns: Sequence[str | DNNGraph],
+                   platform: Platform) -> list[DNNGraph]:
+    return [d if isinstance(d, DNNGraph) else get_graph(d, platform)
+            for d in dnns]
+
+
+def failed(row: object) -> bool:
+    """True for a structured error row in :meth:`Scheduler.compare` output."""
+    return isinstance(row, dict) and "error" in row
+
+
+def _error_row(exc: BaseException) -> dict:
+    return {"error": {"type": type(exc).__name__, "message": str(exc)}}
+
+
+class Scheduler:
+    """Holds a resolved platform + contention model; produces cached Plans."""
+
+    def __init__(self, platform: str | Platform = "agx-orin",
+                 model: ContentionModel | None = None,
+                 cache: PlanCache | None = None):
+        self.platform = resolve_platform(platform)
+        self.model = model or default_model(self.platform)
+        self.cache = cache if cache is not None else PlanCache()
+        #: actual solver invocations (== cache misses that reached a solver).
+        self.solves = 0
+
+    def __repr__(self) -> str:
+        return (f"Scheduler(platform={self.platform.name!r}, "
+                f"model={type(self.model).__name__}, "
+                f"cached={len(self.cache)}, solves={self.solves})")
+
+    # ------------------------------------------------------------------
+    def graphs(self, dnns: Sequence[str | DNNGraph]) -> list[DNNGraph]:
+        """Resolve paper-profile names / pass through pre-built graphs."""
+        return resolve_graphs(dnns, self.platform)
+
+    def request(self, dnns: Sequence[str | DNNGraph],
+                objective: str = "latency", *,
+                model: ContentionModel | None = None,
+                solver: str = registry.AUTO,
+                max_transitions: int | None = 3,
+                iterations: Sequence[int] | None = None,
+                depends_on: Sequence[int | None] | None = None,
+                deadline_s: float | None = None) -> ScheduleRequest:
+        """Build a validated request against this scheduler's platform."""
+        return ScheduleRequest(
+            graphs=tuple(self.graphs(dnns)),
+            platform=self.platform,
+            model=model or self.model,
+            objective=objective,
+            solver=solver,
+            max_transitions=max_transitions,
+            iterations=tuple(iterations or ()),
+            depends_on=tuple(depends_on or ()),
+            deadline_s=deadline_s,
+        )
+
+    # ------------------------------------------------------------------
+    def resolve(self, request: ScheduleRequest) -> Plan:
+        """Cache-or-solve entry point — every schedule goes through here."""
+        h = request.request_hash()
+        plan = self.cache.get(h)
+        if plan is not None:
+            log.info("plan cache hit %s (solver=%s, %.3fs solve amortized)",
+                     h[:12], plan.solver, plan.solve_time_s)
+            return plan
+        kind, sol, dt = self._dispatch(request)
+        self.solves += 1
+        plan = Plan(request=request, solution=sol, solver=kind,
+                    solve_time_s=dt, request_hash=h,
+                    platform_fingerprint=platform_fingerprint(
+                        request.platform))
+        self.cache.put(plan)
+        log.info("solved %s with %s in %.3fs (%s=%.6g, optimal=%s)",
+                 h[:12], kind, dt, sol.kind, sol.objective, sol.optimal)
+        return plan
+
+    def _dispatch(self, request: ScheduleRequest):
+        errors = []
+        for entry in registry.dispatch_order(request.solver):
+            t0 = time.perf_counter()
+            try:
+                sol = entry.fn(
+                    request.platform, list(request.graphs), request.model,
+                    objective=request.objective,
+                    max_transitions=request.max_transitions,
+                    iterations=list(request.iterations),
+                    depends_on=list(request.depends_on),
+                    deadline_s=request.deadline_s)
+            except ValueError as exc:
+                # e.g. exhaustive search space too large: degrade down the
+                # registry's priority order (z3 -> bb -> greedy).
+                errors.append(f"{entry.name}: {exc}")
+                log.info("solver %s declined (%s), trying next entry",
+                         entry.name, exc)
+                continue
+            return entry.name, sol, time.perf_counter() - t0
+        raise RuntimeError(
+            f"no solver produced a schedule for {request.request_hash()[:12]}"
+            f": {'; '.join(errors)}")
+
+    def solve(self, dnns: Sequence[str | DNNGraph],
+              objective: str = "latency", **kwargs) -> Plan:
+        """Request + resolve in one call (kwargs as in :meth:`request`)."""
+        return self.resolve(self.request(dnns, objective, **kwargs))
+
+    # ------------------------------------------------------------------
+    def evaluate_baseline(self, name: str, dnns: Sequence[str | DNNGraph],
+                          *, model: ContentionModel | None = None,
+                          iterations: Sequence[int] | None = None,
+                          depends_on: Sequence[int | None] | None = None,
+                          ) -> tuple[list[Workload], SimResult]:
+        """Evaluate one registered baseline under the exact simulator."""
+        graphs = self.graphs(dnns)
+        wls = registry.get_baseline(name)(
+            self.platform, graphs, iterations=iterations,
+            depends_on=depends_on)
+        return wls, simulate(self.platform, wls, model or self.model)
+
+    def compare(self, dnns: Sequence[str | DNNGraph],
+                objective: str = "latency", *,
+                model: ContentionModel | None = None,
+                solver: str = registry.AUTO,
+                max_transitions: int | None = 3,
+                iterations: Sequence[int] | None = None,
+                depends_on: Sequence[int | None] | None = None,
+                deadline_s: float | None = 20.0,
+                ) -> dict[str, SimResult | Plan | dict]:
+        """HaX-CoNN vs. every registered baseline (Table-6 row shape).
+
+        Baseline rows are :class:`SimResult`; the ``"haxconn"`` row is a
+        :class:`Plan`.  A failing row is recorded as a structured
+        ``{"error": {"type", "message"}}`` dict (see :func:`failed`) so
+        "infeasible on this platform" is distinguishable from "crashed".
+        """
+        graphs = self.graphs(dnns)
+        rows: dict[str, SimResult | Plan | dict] = {}
+        for name in registry.baseline_names():
+            try:
+                _, res = self.evaluate_baseline(
+                    name, graphs, model=model, iterations=iterations,
+                    depends_on=depends_on)
+                rows[name] = res
+            except (ValueError, KeyError, RuntimeError) as exc:
+                rows[name] = _error_row(exc)
+        try:
+            rows["haxconn"] = self.solve(
+                graphs, objective, model=model, solver=solver,
+                max_transitions=max_transitions, iterations=iterations,
+                depends_on=depends_on, deadline_s=deadline_s)
+        except (ValueError, KeyError, RuntimeError,
+                registry.SolverUnavailable) as exc:
+            rows["haxconn"] = _error_row(exc)
+        return rows

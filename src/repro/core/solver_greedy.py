@@ -1,0 +1,112 @@
+"""Greedy contention-aware solver (pure Python, no z3, never exhaustive).
+
+The registry's last-resort entry for ``solver="auto"``: when z3 is missing
+and the branch-and-bound search space is too large, this solver still
+returns a valid, contention-scored schedule in polynomial time:
+
+  1. evaluate every baseline scheduler under the *exact* contention
+     simulator and take the best one as the incumbent (the same §5.3
+     starting point the CEGAR loop uses);
+  2. hill-climb with single-group reassignment moves, accepting only moves
+     the simulator scores as strict improvements, until a sweep over every
+     (workload, group, accelerator) move finds nothing (or ``max_sweeps``
+     is hit).
+
+The result is never worse than the best baseline — the never-worse
+guarantee HaX-CoNN claims for its fallback path — but carries no
+optimality certificate (``Solution.optimal`` is always False).
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+from .accelerators import Platform
+from .contention import ContentionModel
+from .graph import DNNGraph
+from .simulate import Workload, simulate
+
+_EPS = 1e-9
+
+
+def _legal(graph: DNNGraph, assignment: Sequence[str],
+           max_transitions: int | None) -> bool:
+    trans = 0
+    for i in range(len(assignment) - 1):
+        if assignment[i] != assignment[i + 1]:
+            if not graph[i].can_transition_after:
+                return False
+            trans += 1
+    return max_transitions is None or trans <= max_transitions
+
+
+def solve(
+    platform: Platform,
+    graphs: Sequence[DNNGraph],
+    model: ContentionModel | Mapping[str, ContentionModel],
+    objective: str = "latency",
+    max_transitions: int | None = 3,
+    iterations: Sequence[int] | None = None,
+    depends_on: Sequence[int | None] | None = None,
+    max_sweeps: int = 3,
+):
+    from .solver_bb import Solution
+
+    its = list(iterations or [1] * len(graphs))
+    deps = list(depends_on or [None] * len(graphs))
+
+    def build(assignments):
+        return [Workload(g, tuple(a), iterations=it, depends_on=dep)
+                for g, a, it, dep in zip(graphs, assignments, its, deps)]
+
+    # 1) incumbent: best *registered* baseline under the exact simulator
+    # (registry imported lazily — it registers this module at import time).
+    from . import registry
+
+    best = None
+    evaluated = 0
+    for name in registry.baseline_names():
+        try:
+            wls = registry.get_baseline(name)(
+                platform, graphs, iterations=its, depends_on=deps)
+        except (ValueError, KeyError):
+            continue
+        if any(not _legal(w.graph, w.assignment, max_transitions)
+               for w in wls):
+            continue
+        res = simulate(platform, wls, model, record_timeline=False)
+        evaluated += 1
+        obj = res.objective(objective)
+        if best is None or obj < best[0]:
+            best = (obj, wls, res)
+    if best is None:
+        raise RuntimeError("no baseline produced a valid schedule")
+    obj, wls, res = best
+
+    # 2) hill climb: single-group reassignments scored by the simulator.
+    assignments = [list(w.assignment) for w in wls]
+    for _ in range(max_sweeps):
+        improved = False
+        for n, g in enumerate(graphs):
+            for i in range(len(g)):
+                for acc in platform.names:
+                    if acc == assignments[n][i] or acc not in g[i].times:
+                        continue
+                    old = assignments[n][i]
+                    assignments[n][i] = acc
+                    if not _legal(g, assignments[n], max_transitions):
+                        assignments[n][i] = old
+                        continue
+                    cand = build(assignments)
+                    cand_res = simulate(platform, cand, model,
+                                        record_timeline=False)
+                    evaluated += 1
+                    cand_obj = cand_res.objective(objective)
+                    if cand_obj < obj - _EPS:
+                        obj, wls, res = cand_obj, cand, cand_res
+                        improved = True
+                    else:
+                        assignments[n][i] = old
+        if not improved:
+            break
+
+    return Solution(wls, res, obj, objective, evaluated, optimal=False)

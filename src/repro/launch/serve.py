@@ -5,6 +5,15 @@ Single-model continuous-batching service on reduced configs (CPU);
 production pod split; --gateway additionally *serves* both models
 concurrently through the contention-aware multi-tenant gateway (phase-aware
 schedule, shared KV budget, dynamic re-scheduling).
+
+Plan artifacts (pre-solve offline, boot cold with zero solver invocations):
+
+    # pre-solve the gateway schedule and persist it
+    python -m repro.launch.serve --gateway --arch A --co-arch B \
+        --save-plan artifacts/plans/gw.json --plan-only
+    # later / elsewhere: boot the gateway from the cached artifact
+    python -m repro.launch.serve --gateway --arch A --co-arch B \
+        --plan artifacts/plans/gw.json
 """
 from __future__ import annotations
 
@@ -20,6 +29,8 @@ from repro.serve.engine import ServingEngine
 
 def _run_gateway(args) -> int:
     from repro.core.accelerators import tpu_pod_split
+    from repro.core.plan import Plan
+    from repro.core.scheduler import Scheduler
     from repro.serve.gateway import (GatewayConfig, MultiTenantGateway,
                                      TenantSpec)
     archs = [args.arch, args.co_arch]
@@ -29,10 +40,39 @@ def _run_gateway(args) -> int:
              for a in archs]
     budget = (args.budget_slots * max(s.kv_bytes_per_slot for s in specs)
               if args.budget_slots else None)
-    gw = MultiTenantGateway(specs, GatewayConfig(
+    gcfg = GatewayConfig(
         platform=tpu_pod_split(4, 12, name="v5e-4x12-split"),
-        memory_budget_bytes=budget))
-    print(gw.plan.summary())
+        memory_budget_bytes=budget)
+    scheduler = Scheduler(gcfg.platform, gcfg.model)
+    if args.plan:
+        loaded = Plan.load(args.plan)
+        scheduler.cache.add(loaded)
+        print(f"loaded plan {loaded.request_hash[:12]} "
+              f"(solver={loaded.solver}, "
+              f"solved offline in {loaded.solve_time_s:.3f}s)")
+
+    if args.plan_only:
+        from repro.serve.gateway import plan_gateway
+        plan = plan_gateway(specs, gcfg, scheduler=scheduler)
+    else:
+        gw = MultiTenantGateway(specs, gcfg, scheduler=scheduler)
+        plan = gw.plan
+
+    if args.plan:
+        if scheduler.solves:
+            print("ERROR: plan artifact did not cover the request — "
+                  f"{scheduler.solves} fresh solver invocation(s)")
+            return 1
+        print(f"plan cache hit: booted from {args.plan} with zero solver "
+              f"invocations")
+    if args.save_plan:
+        path = plan.plan.save(args.save_plan)
+        print(f"plan {plan.plan.request_hash[:12]} "
+              f"(solver={plan.plan.solver}) saved to {path}")
+    print(plan.summary())
+    if args.plan_only:
+        return 0
+
     rng = np.random.default_rng(0)
     for name, s in gw.specs.items():
         for _ in range(args.requests):
@@ -60,8 +100,19 @@ def main(argv=None):
     ap.add_argument("--shape", default="decode_32k")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="boot the gateway from a serialized Plan artifact "
+                         "(fails if the request is not covered: zero solver "
+                         "invocations are asserted)")
+    ap.add_argument("--save-plan", default=None, metavar="PATH",
+                    help="serialize the solved gateway Plan to PATH")
+    ap.add_argument("--plan-only", action="store_true",
+                    help="plan (and optionally save) without serving")
     args = ap.parse_args(argv)
 
+    if args.plan or args.save_plan or args.plan_only:
+        if not args.gateway:
+            ap.error("--plan/--save-plan/--plan-only require --gateway")
     if args.gateway:
         if not args.co_arch:
             ap.error("--gateway requires --co-arch")

@@ -22,12 +22,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SHAPES, ModelConfig, ShapeCell
-from repro.core import api as core_api
-from repro.core import solver_z3
 from repro.core.accelerators import Platform, tpu_pod_split
-from repro.core.baselines import BASELINES
 from repro.core.graph import DNNGraph
-from repro.core.simulate import SimResult, Workload, simulate
+from repro.core.plan import Plan
+from repro.core.scheduler import Scheduler, failed
 from repro.models import Model
 from repro.models.graph_export import export_graph
 
@@ -36,20 +34,27 @@ from repro.models.graph_export import export_graph
 class ServingPlan:
     graphs: list[DNNGraph]
     solution: object                  # core.solver_bb.Solution
-    baselines: dict[str, SimResult]
+    #: per-baseline SimResult, or a structured {"error": ...} row when that
+    #: baseline is infeasible on this platform (see core.scheduler.failed).
+    baselines: dict[str, object]
     platform: Platform
+    #: serializable provenance artifact of the haxconn solution.
+    plan: Plan | None = None
 
     @property
     def speedup_vs_best_baseline(self) -> float:
         best = min(r.latency_ms for r in self.baselines.values()
-                   if r is not None)
+                   if not failed(r))
         return best / self.solution.result.latency_ms
 
     def summary(self) -> str:
         rows = [f"objective={self.solution.kind} "
                 f"optimal={self.solution.optimal}"]
         for name, res in self.baselines.items():
-            if res is not None:
+            if failed(res):
+                rows.append(f"  {name:18s} infeasible: "
+                            f"{res['error']['message']}")
+            else:
                 rows.append(f"  {name:18s} lat={res.latency_ms:9.3f}ms "
                             f"fps={res.throughput_fps:8.1f}")
         sol = self.solution
@@ -71,25 +76,21 @@ def plan_concurrent_serving(
     objective: str = "latency",
     iterations: Sequence[int] | None = None,
     deadline_s: float = 20.0,
+    scheduler: Scheduler | None = None,
 ) -> ServingPlan:
     """Schedule concurrent inference of several models on a split pod."""
-    plat = platform or tpu_pod_split()
-    model = core_api.default_model(plat)
+    sched = scheduler or Scheduler(platform or tpu_pod_split())
+    plat = sched.platform
     graphs = []
     for cfg, cell in zip(cfgs, cells):
         cell = SHAPES[cell] if isinstance(cell, str) else cell
         graphs.append(export_graph(cfg, cell, plat))
-    base = {}
-    for name, fn in BASELINES.items():
-        try:
-            base[name] = simulate(plat, fn(plat, graphs,
-                                           iterations=iterations), model)
-        except (ValueError, KeyError):
-            base[name] = None
-    sol = solver_z3.solve(plat, graphs, model, objective=objective,
-                          max_transitions=2, iterations=iterations,
-                          deadline_s=deadline_s)
-    return ServingPlan(graphs, sol, base, plat)
+    rows = sched.compare(graphs, objective, max_transitions=2,
+                         iterations=iterations, deadline_s=deadline_s)
+    plan = rows.pop("haxconn")
+    if failed(plan):
+        raise RuntimeError(f"no schedule found: {plan['error']['message']}")
+    return ServingPlan(graphs, plan.solution, rows, plat, plan=plan)
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,10 @@
 """Contention-aware multi-tenant serving gateway.
 
 Unifies the single-model continuous-batching engine
-(:mod:`repro.serve.engine`), the HaX-CoNN planner (:mod:`repro.core.api`)
-and the D-HaX-CoNN dynamic loop (:mod:`repro.core.dynamic`) into one
-subsystem that serves *several* models concurrently on a shared-memory
-platform:
+(:mod:`repro.serve.engine`), the HaX-CoNN planner
+(:class:`repro.core.Scheduler`) and the D-HaX-CoNN dynamic loop
+(:mod:`repro.core.dynamic`) into one subsystem that serves *several* models
+concurrently on a shared-memory platform:
 
 * **Phase-aware planning** — every tenant is exported as one schedulable
   chain ``prefill groups -> decode macro-groups`` (a decode macro-group is
@@ -22,8 +22,9 @@ platform:
   (the stand-in for the plan's prediction where wall-clock and simulated
   ms are incommensurate; the predicted step latency itself is reported by
   :meth:`GatewayPlan.predicted_decode_step_ms`).  A sustained deviation
-  re-solves via :class:`~repro.core.dynamic.DHaXCoNN` under a contention
-  model rescaled to the observed severity.
+  re-solves via :func:`~repro.core.dynamic.reschedule_plan` —
+  ``Scheduler.resolve`` under a contention model rescaled to the observed
+  severity, so re-schedules are plan-cached and logged like offline solves.
 
 Timing on this CPU-only container is simulated (the plan's exact
 event-driven timeline); token generation is real compute on reduced
@@ -39,12 +40,13 @@ from typing import Mapping, Sequence
 import jax
 
 from repro.configs.base import ModelConfig, ShapeCell
-from repro.core import api as core_api
 from repro.core.accelerators import Platform
 from repro.core.contention import ContentionModel
-from repro.core.dynamic import (DHaXCoNN, ScaledContentionModel,
-                                SlowdownMonitor)
+from repro.core.dynamic import (ScaledContentionModel, SlowdownMonitor,
+                                quantize_severity, reschedule_plan)
 from repro.core.graph import DNNGraph
+from repro.core.plan import Plan, PlanCache
+from repro.core.scheduler import Scheduler
 from repro.core.simulate import SimResult, Workload, simulate
 from repro.core.solver_bb import Solution
 from repro.models import build
@@ -152,6 +154,9 @@ class GatewayPlan:
     round_robin: SimResult
     #: #groups in the prefill phase per tenant (decode groups follow).
     n_prefill_groups: dict[str, int]
+    #: the serializable artifact this plan came from (provenance: request
+    #: hash, solver entry, solve wall-time); None only for hand-built plans.
+    plan: Plan | None = None
 
     @property
     def speedup_vs_round_robin(self) -> float:
@@ -213,27 +218,36 @@ def round_robin_workloads(platform: Platform, graphs: Sequence[DNNGraph],
 def plan_gateway(specs: Sequence[TenantSpec],
                  gcfg: GatewayConfig = GatewayConfig(),
                  iterations: Sequence[int] | None = None,
-                 deadline_s: float | None = 20.0) -> GatewayPlan:
-    """Contention-aware (model, phase) -> accelerator plan for all tenants."""
-    plat = core_api.resolve_platform(gcfg.platform)
-    model = gcfg.model or core_api.default_model(plat)
+                 deadline_s: float | None = 20.0,
+                 scheduler: Scheduler | None = None) -> GatewayPlan:
+    """Contention-aware (model, phase) -> accelerator plan for all tenants.
+
+    ``scheduler`` lets a control plane share one plan cache across tenant
+    churn (and pre-load serialized :class:`Plan` artifacts so booting the
+    gateway performs zero solver invocations); when given, its platform and
+    model override ``gcfg.platform``/``gcfg.model``.
+    """
+    sched = scheduler or Scheduler(gcfg.platform, gcfg.model)
+    plat = sched.platform
     graphs = [tenant_phase_graph(s, plat, gcfg.body_groups) for s in specs]
     npf = {}
     for s, g in zip(specs, graphs):
         npf[s.name] = sum(1 for gr in g.groups
                           if gr.name.startswith("prefill:"))
     its = list(iterations or [1] * len(specs))
-    sol = core_api.schedule(graphs, plat, gcfg.objective, model,
-                            max_transitions=gcfg.max_transitions,
-                            iterations=its, deadline_s=deadline_s)
+    plan = sched.resolve(sched.request(
+        graphs, gcfg.objective, max_transitions=gcfg.max_transitions,
+        iterations=its, deadline_s=deadline_s))
+    sol = plan.solution
     # re-simulate with the timeline recorded — predicted per-step latencies
     # are read off the decode-group intervals.
-    res = simulate(plat, sol.workloads, model, record_timeline=True)
+    res = simulate(plat, sol.workloads, sched.model, record_timeline=True)
     sol = Solution(sol.workloads, res, sol.objective, sol.kind,
                    sol.evaluated, sol.optimal)
-    rr = simulate(plat, round_robin_workloads(plat, graphs, its), model,
-                  record_timeline=False)
-    return GatewayPlan(plat, list(specs), graphs, its, sol, rr, npf)
+    rr = simulate(plat, round_robin_workloads(plat, graphs, its),
+                  sched.model, record_timeline=False)
+    return GatewayPlan(plat, list(specs), graphs, its, sol, rr, npf,
+                       plan=plan)
 
 
 # ---------------------------------------------------------------------------
@@ -266,7 +280,8 @@ class MultiTenantGateway:
     def __init__(self, specs: Sequence[TenantSpec],
                  gcfg: GatewayConfig = GatewayConfig(),
                  iterations: Sequence[int] | None = None,
-                 deadline_s: float | None = 20.0, seed: int = 0):
+                 deadline_s: float | None = 20.0, seed: int = 0,
+                 scheduler: Scheduler | None = None):
         if len({s.name for s in specs}) != len(specs):
             raise ValueError("duplicate tenant names")
         for s in specs:
@@ -276,9 +291,14 @@ class MultiTenantGateway:
                     f"the gateway serves decode workloads")
         self.specs = {s.name: s for s in specs}
         self.gcfg = gcfg
-        self.plan = plan_gateway(specs, gcfg, iterations, deadline_s)
-        self._base_model = gcfg.model or core_api.default_model(
-            self.plan.platform)
+        # bounded cache: the gateway re-solves at runtime-observed
+        # severities indefinitely, so its private cache must not grow
+        # without limit (a shared scheduler manages its own policy).
+        self.scheduler = scheduler or Scheduler(
+            gcfg.platform, gcfg.model, cache=PlanCache(max_entries=256))
+        self.plan = plan_gateway(specs, gcfg, iterations, deadline_s,
+                                 scheduler=self.scheduler)
+        self._base_model = self.scheduler.model
         self.engines: dict[str, ServingEngine] = {}
         for i, s in enumerate(specs):
             m = build(s.cfg)
@@ -375,30 +395,38 @@ class MultiTenantGateway:
         naive one.  Both objectives in the recorded event are therefore
         commensurate (same contention model).
         """
-        factor = max(self.monitors[n].ratio for n in tenants)
+        # quantized once, up front: the incumbent re-evaluation and the
+        # re-solve must price contention under the *same* model or their
+        # objectives are incommensurate.
+        factor = quantize_severity(
+            max(self.monitors[n].ratio for n in tenants))
         model = ScaledContentionModel(self._base_model, factor)
         old = self.plan.solution
         cur_res = simulate(self.plan.platform, old.workloads, model,
                            record_timeline=True)
         cur_obj = cur_res.objective(self.gcfg.objective)
-        d = DHaXCoNN(self.plan.platform, self.plan.graphs, model,
-                     self.gcfg.objective,
-                     max_transitions=self.gcfg.max_transitions,
-                     iterations=self.plan.iterations)
-        d.step(self.gcfg.reschedule_budget_s)
-        if d.best.objective < cur_obj - 1e-9:
-            res = simulate(self.plan.platform, d.best.workloads, model,
+        rplan = reschedule_plan(
+            self.scheduler, self.plan.graphs, factor,
+            objective=self.gcfg.objective,
+            max_transitions=self.gcfg.max_transitions,
+            iterations=self.plan.iterations,
+            budget_s=self.gcfg.reschedule_budget_s)
+        best = rplan.solution
+        if best.objective < cur_obj - 1e-9:
+            res = simulate(self.plan.platform, best.workloads, model,
                            record_timeline=True)
-            new = Solution(d.best.workloads, res, d.best.objective,
-                           d.best.kind, d.best.evaluated, d.best.optimal)
+            new = Solution(best.workloads, res, best.objective,
+                           best.kind, best.evaluated, best.optimal)
+            art = rplan          # provenance follows the adopted schedule
         else:
             new = Solution(old.workloads, cur_res, cur_obj, old.kind,
-                           d.best.evaluated, False)
+                           best.evaluated, False)
+            art = self.plan.plan
         changed = new.assignments != old.assignments
         self.reschedules.append(RescheduleEvent(
             self.total_steps, tenants, factor, cur_obj, new.objective,
             changed))
-        self.plan = dataclasses.replace(self.plan, solution=new)
+        self.plan = dataclasses.replace(self.plan, solution=new, plan=art)
         for n in tenants:
             self.monitors[n].reset()
             # the post-adaptation steady state becomes the new baseline

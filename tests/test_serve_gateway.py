@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro import configs
+from repro.core import Plan, Scheduler
 from repro.core.accelerators import tpu_pod_split
 from repro.core.contention import ProportionalShareModel
 from repro.core.dynamic import ScaledContentionModel, SlowdownMonitor
@@ -71,6 +72,26 @@ class TestPlanning:
             total = len(ph["prefill"]) + len(ph["decode"])
             assert total == len(plan.graphs[plan._idx(s.name)])
             assert plan.predicted_decode_step_ms(s.name) > 0.0
+
+    def test_serialized_plan_boots_gateway_with_zero_solves(self, tmp_path):
+        """Pre-solve offline, reload the artifact, re-plan: cache hit only."""
+        s1 = Scheduler(PLAT)
+        plan1 = plan_gateway(_specs(), _gcfg(), scheduler=s1)
+        assert s1.solves == 1
+        path = plan1.plan.save(tmp_path / "gw.json")
+
+        s2 = Scheduler(PLAT)
+        s2.cache.add(Plan.load(path))
+        plan2 = plan_gateway(_specs(), _gcfg(), scheduler=s2)
+        assert s2.solves == 0 and s2.cache.hits == 1
+        assert plan2.solution.assignments == plan1.solution.assignments
+        assert plan2.plan.request_hash == plan1.plan.request_hash
+
+    def test_shared_scheduler_caches_across_gateways(self):
+        sched = Scheduler(PLAT)
+        MultiTenantGateway(_specs(), _gcfg(), scheduler=sched)
+        MultiTenantGateway(_specs(), _gcfg(), scheduler=sched)
+        assert sched.solves == 1 and sched.cache.hits >= 1
 
 
 # ---------------------------------------------------------------------------
