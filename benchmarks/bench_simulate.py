@@ -1,0 +1,143 @@
+"""Candidate-evaluation throughput: batch evaluator vs scalar simulator.
+
+Reproduces the hot loop behind Table 8: for every unordered DNN pair of the
+evaluation set on AGX Orin, enumerate the full exhaustive assignment
+population (``max_transitions`` transitions per DNN, §5.4 iteration
+balancing) and score every candidate schedule under the exact Eq. 2-8
+timeline — once through the scalar event-driven simulator (one timeline at
+a time) and once through the vectorized batch evaluator (the whole sweep as
+one lockstep pass via :func:`repro.core.simulate_batch.simulate_sweep`).
+
+Writes ``BENCH_simulate.json`` (repo root) with per-pair rows and the
+aggregate candidates/second of both paths; the README performance table
+quotes it, and CI uploads it as an artifact.  Agreement between the two
+paths is asserted to 1e-6 on every candidate's makespan while measuring —
+the benchmark doubles as a coarse differential check.
+
+    PYTHONPATH=src python -m benchmarks.bench_simulate [--pairs N]
+    [--max-transitions T] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import Scheduler
+from repro.core.simulate import Workload, simulate
+from repro.core.simulate_batch import simulate_sweep
+from repro.core.solver_bb import enumerate_assignments
+from repro.core.profiles import DNN_SET
+
+from .common import emit, fmt_table
+
+from .table8_exhaustive import balanced_iterations
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_simulate.json"
+
+
+def build_problems(sched: Scheduler, pairs, max_transitions: int):
+    problems = []
+    for a, b in pairs:
+        graphs = sched.graphs([a, b])
+        its = balanced_iterations(sched.platform, graphs)
+        cands = [enumerate_assignments(g, sched.platform.names,
+                                       max_transitions) for g in graphs]
+        problems.append(((a, b), graphs, cands, its))
+    return problems
+
+
+def run(pairs_limit: int | None, max_transitions: int,
+        out_path: pathlib.Path) -> dict:
+    sched = Scheduler("agx-orin")
+    plat, model = sched.platform, sched.model
+    pairs = list(itertools.combinations(DNN_SET, 2))
+    if pairs_limit:
+        pairs = pairs[:pairs_limit]
+    problems = build_problems(sched, pairs, max_transitions)
+    sizes = [int(np.prod([len(c) for c in cands]))
+             for _, _, cands, _ in problems]
+    total = sum(sizes)
+    print(f"Table-8 sweep: {len(problems)} pairs, {total} candidate "
+          f"schedules (max_transitions={max_transitions})")
+
+    # -- scalar path: one event-driven timeline per candidate -------------
+    t0 = time.perf_counter()
+    scalar_makespans = []
+    for _pair, graphs, cands, its in problems:
+        for asgs in itertools.product(*cands):
+            wls = [Workload(g, tuple(asg), iterations=it)
+                   for g, asg, it in zip(graphs, asgs, its)]
+            res = simulate(plat, wls, model, record_timeline=False)
+            scalar_makespans.append(res.makespan)
+    t_scalar = time.perf_counter() - t0
+
+    # -- batch path: the whole sweep in one lockstep pass -----------------
+    t0 = time.perf_counter()
+    bt, slices = simulate_sweep(
+        plat,
+        [(graphs, cands, its, None)
+         for _pair, graphs, cands, its in problems],
+        model, validate=False)
+    t_batch = time.perf_counter() - t0
+
+    diff = float(np.abs(bt.makespan
+                        - np.asarray(scalar_makespans)).max())
+    assert diff < 1e-6, f"batch/scalar disagreement: {diff}"
+
+    rows = []
+    for (pair, _g, cands, its), size, sl in zip(problems, sizes, slices):
+        rows.append({
+            "pair": list(pair), "iterations": its,
+            "candidates": size,
+            "best_makespan_ms": float(bt.makespan[sl].min()),
+        })
+    result = {
+        "benchmark": "table8_candidate_evaluation",
+        "platform": "agx-orin",
+        "max_transitions": max_transitions,
+        "pairs": len(problems),
+        "candidates": total,
+        "scalar_s": round(t_scalar, 4),
+        "batch_s": round(t_batch, 4),
+        "scalar_cands_per_s": round(total / t_scalar, 1),
+        "batch_cands_per_s": round(total / t_batch, 1),
+        "speedup": round(t_scalar / t_batch, 2),
+        "max_abs_makespan_diff": diff,
+        "rows": rows,
+    }
+    out_path.write_text(json.dumps(result, indent=1) + "\n")
+
+    print(fmt_table(
+        ["path", "wall s", "candidates/s"],
+        [["scalar", f"{t_scalar:.2f}", f"{total / t_scalar:.0f}"],
+         ["batch", f"{t_batch:.2f}", f"{total / t_batch:.0f}"]]))
+    print(f"speedup: {result['speedup']}x "
+          f"(max |makespan diff| = {diff:.2e})")
+    print(f"wrote {out_path}")
+    emit("bench_simulate.candidate_throughput", t_batch * 1e6,
+         f"speedup={result['speedup']}x;candidates={total};"
+         f"batch_cps={result['batch_cands_per_s']:.0f}")
+    return result
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pairs", type=int, default=None,
+                    help="limit the sweep to the first N pairs (default: "
+                         "all 45)")
+    ap.add_argument("--max-transitions", type=int, default=2,
+                    help="transition budget per DNN for the candidate "
+                         "population (default 2)")
+    ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    return run(args.pairs, args.max_transitions, args.out)
+
+
+if __name__ == "__main__":
+    main()

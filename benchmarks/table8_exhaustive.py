@@ -12,8 +12,9 @@ from __future__ import annotations
 
 import itertools
 
-from repro.core import Scheduler, registry
+from repro.core import Scheduler
 from repro.core.profiles import DNN_SET
+from repro.core.scheduler import failed
 
 from .common import emit, fmt_table, timed
 
@@ -27,13 +28,11 @@ def balanced_iterations(plat, graphs) -> list[int]:
 def run_pair(sched: Scheduler, a: str, b: str) -> dict:
     graphs = sched.graphs([a, b])
     its = balanced_iterations(sched.platform, graphs)
-    base = {}
-    for name in registry.baseline_names():
-        try:
-            _, res = sched.evaluate_baseline(name, graphs, iterations=its)
-            base[name] = res.throughput_fps
-        except (ValueError, KeyError):
-            pass
+    # one vectorized sweep over every registered baseline (the haxconn row
+    # below also searches through the batch evaluator by default).
+    rows = sched.evaluate_baselines(graphs, iterations=its)
+    base = {name: res.throughput_fps for name, res in rows.items()
+            if not failed(res)}
     best_name = max(base, key=base.get)
     plan = sched.solve(graphs, "throughput", solver="bb",
                        max_transitions=1, iterations=its)

@@ -19,6 +19,8 @@ from .plan import Plan, PlanCache, ScheduleRequest
 from .scheduler import (DEFAULT_POD_MODEL, DEFAULT_SOC_MODEL, Scheduler,
                         default_model, resolve_graphs, resolve_platform)
 from .simulate import Interval, SimResult, Workload, simulate
+from .simulate_batch import (BatchTimeline, simulate_assignments,
+                             simulate_batch, simulate_sweep)
 from .solver_bb import Solution
 
 __all__ = [
@@ -27,6 +29,8 @@ __all__ = [
     "estimate_blackbox_demand", "pccs_from_pairs",
     "DNNGraph", "LayerGroup",
     "Interval", "SimResult", "Workload", "simulate",
+    "BatchTimeline", "simulate_assignments", "simulate_batch",
+    "simulate_sweep",
     "Solution",
     "Plan", "PlanCache", "ScheduleRequest", "Scheduler",
     "DEFAULT_POD_MODEL", "DEFAULT_SOC_MODEL",

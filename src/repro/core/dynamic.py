@@ -33,6 +33,7 @@ from .plan import Plan, ScheduleRequest
 from .registry import (decode_model, encode_model,
                        register_contention_model)
 from .simulate import Workload, simulate
+from .simulate_batch import register_vectorized_slowdown, slowdown_array
 from .solver_bb import Solution
 from .solver_z3 import _EPS, _Encoding, _incumbent
 
@@ -212,6 +213,10 @@ register_contention_model(
     encode=lambda m: {"factor": m.factor, "base": encode_model(m.base)},
     decode=lambda cfg: ScaledContentionModel(
         decode_model(cfg["base"]), cfg["factor"]))
+register_vectorized_slowdown(
+    ScaledContentionModel,
+    lambda m, own, ext: 1.0 + m.factor * (slowdown_array(m.base, own, ext)
+                                          - 1.0))
 
 
 def quantize_severity(factor: float) -> float:

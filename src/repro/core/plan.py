@@ -290,6 +290,10 @@ class Plan:
     solve_time_s: float
     request_hash: str
     platform_fingerprint: str
+    #: evaluator the solver searched with ("batch"|"scalar"); provenance
+    #: only — the recorded result always comes from the scalar simulator,
+    #: and the request hash is evaluator-independent.
+    evaluator: str = "scalar"
     created_at: float = field(default_factory=time.time)
 
     # -- convenience views ------------------------------------------------
@@ -312,6 +316,7 @@ class Plan:
     def summary(self) -> str:
         res = self.solution.result
         rows = [f"plan {self.request_hash[:12]} solver={self.solver} "
+                f"evaluator={self.evaluator} "
                 f"objective={self.solution.kind}={self.objective:.4f} "
                 f"optimal={self.optimal} solve={self.solve_time_s:.3f}s",
                 f"  platform={self.request.platform.name} "
@@ -330,6 +335,7 @@ class Plan:
             "solve_time_s": self.solve_time_s,
             "request_hash": self.request_hash,
             "platform_fingerprint": self.platform_fingerprint,
+            "evaluator": self.evaluator,
             "created_at": self.created_at,
         }
 
@@ -356,6 +362,8 @@ class Plan:
             solve_time_s=d["solve_time_s"],
             request_hash=d["request_hash"],
             platform_fingerprint=d["platform_fingerprint"],
+            # absent in pre-batch-evaluator artifacts: those searched scalar.
+            evaluator=d.get("evaluator", "scalar"),
             created_at=d["created_at"],
         )
 

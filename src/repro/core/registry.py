@@ -31,11 +31,15 @@ from dataclasses import dataclass
 from typing import Any, Callable, Mapping
 
 from . import baselines as _baselines
+from . import simulate_batch as _sb
 from . import solver_bb, solver_greedy, solver_z3
 from .contention import PiecewiseModel, ProportionalShareModel
+from .simulate import SimResult, Workload, simulate
 from .solver_bb import Solution
 
 AUTO = "auto"
+#: evaluator auto-selection sentinel (same spelling as the solver knob).
+EVAL_AUTO = "auto"
 
 
 class SolverUnavailable(RuntimeError):
@@ -125,7 +129,10 @@ def dispatch_order(name: str) -> tuple[SolverEntry, ...]:
                  available=lambda: solver_z3.HAVE_Z3,
                  description="CEGAR-optimal via Z3 + exact simulator (§3.4)")
 def _solve_z3(platform, graphs, model, *, objective, max_transitions,
-              iterations, depends_on, deadline_s) -> Solution:
+              iterations, depends_on, deadline_s,
+              evaluator=EVAL_AUTO) -> Solution:
+    # CEGAR refines one counterexample at a time; its simulator use is
+    # inherently scalar, so the evaluator knob is accepted but unused.
     return solver_z3.solve(platform, graphs, model, objective=objective,
                            max_transitions=max_transitions,
                            iterations=iterations, depends_on=depends_on,
@@ -135,22 +142,133 @@ def _solve_z3(platform, graphs, model, *, objective, max_transitions,
 @register_solver("bb", priority=10,
                  description="exact branch-and-bound (pure Python)")
 def _solve_bb(platform, graphs, model, *, objective, max_transitions,
-              iterations, depends_on, deadline_s) -> Solution:
+              iterations, depends_on, deadline_s,
+              evaluator=EVAL_AUTO) -> Solution:
     # bb has no deadline (it is exact or refuses); None transitions = full
     # space, bounded by the longest chain.
     mt = (max(len(g) for g in graphs) if max_transitions is None
           else max_transitions)
     return solver_bb.solve(platform, graphs, model, objective, mt,
-                           iterations, depends_on)
+                           iterations, depends_on, evaluator=evaluator)
 
 
 @register_solver("greedy", priority=20,
                  description="best baseline + simulator-scored hill climb")
 def _solve_greedy(platform, graphs, model, *, objective, max_transitions,
-                  iterations, depends_on, deadline_s) -> Solution:
+                  iterations, depends_on, deadline_s,
+                  evaluator=EVAL_AUTO) -> Solution:
     return solver_greedy.solve(platform, graphs, model, objective=objective,
                                max_transitions=max_transitions,
-                               iterations=iterations, depends_on=depends_on)
+                               iterations=iterations, depends_on=depends_on,
+                               evaluator=evaluator)
+
+
+# ---------------------------------------------------------------------------
+# evaluators: how candidate schedules are scored (batch vs scalar)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class EvaluatorEntry:
+    """One named way to score candidate schedules under the Eq. 2-8 timeline.
+
+    ``simulate`` scores a single candidate and is always the authoritative
+    scalar simulator; ``simulate_batch``/``simulate_assignments`` score a
+    population in one call.  The "scalar" entry implements the batch
+    interface as a plain loop over the scalar simulator, so every call site
+    written against the batch shape can fall back with ``evaluator="scalar"``
+    and nothing else changes.
+    """
+
+    name: str
+    simulate: Callable[..., SimResult]
+    simulate_batch: Callable[..., "_sb.BatchTimeline"]
+    simulate_assignments: Callable[..., "_sb.BatchTimeline"]
+    available: Callable[[], bool]
+    #: ascending preference order for ``evaluator="auto"``.
+    priority: int
+    description: str = ""
+
+
+_EVALUATORS: dict[str, EvaluatorEntry] = {}
+
+
+def register_evaluator(name: str, *, simulate: Callable[..., SimResult],
+                       simulate_batch: Callable[..., "_sb.BatchTimeline"],
+                       simulate_assignments: Callable[..., "_sb.BatchTimeline"],
+                       priority: int = 100,
+                       available: Callable[[], bool] = lambda: True,
+                       description: str = "",
+                       replace: bool = False) -> None:
+    if name in _EVALUATORS and not replace:
+        raise ValueError(f"evaluator {name!r} already registered")
+    _EVALUATORS[name] = EvaluatorEntry(
+        name, simulate, simulate_batch, simulate_assignments, available,
+        priority, description)
+
+
+def evaluator_names() -> tuple[str, ...]:
+    """Registered evaluator names in auto-dispatch (priority) order."""
+    return tuple(e.name for e in
+                 sorted(_EVALUATORS.values(), key=lambda e: e.priority))
+
+
+def get_evaluator(name: str) -> EvaluatorEntry:
+    try:
+        return _EVALUATORS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown evaluator {name!r}; registered evaluators: "
+            f"{', '.join(evaluator_names())} (or {EVAL_AUTO!r})") from None
+
+
+def resolve_evaluator(name: str = EVAL_AUTO) -> EvaluatorEntry:
+    """Resolve an evaluator name (``"auto"`` -> best available entry)."""
+    if name == EVAL_AUTO:
+        for entry in sorted(_EVALUATORS.values(), key=lambda e: e.priority):
+            if entry.available():
+                return entry
+        raise RuntimeError("no evaluator backend is available")
+    entry = get_evaluator(name)
+    if not entry.available():
+        raise RuntimeError(
+            f"evaluator {name!r} is registered but not available here")
+    return entry
+
+
+def _scalar_simulate_batch(platform, workloads_batch, model,
+                           validate: bool = True) -> "_sb.BatchTimeline":
+    # `validate` is accepted for interface parity; simulate() always
+    # validates its workloads itself, so there is nothing extra to do.
+    results = [simulate(platform, wls, model, record_timeline=False)
+               for wls in workloads_batch]
+    return _sb.batch_from_results(results, platform.names)
+
+
+def _scalar_simulate_assignments(platform, graphs, assignments_batch, model,
+                                 iterations=None, depends_on=None,
+                                 validate: bool = True) -> "_sb.BatchTimeline":
+    its = list(iterations or [1] * len(graphs))
+    deps = list(depends_on or [None] * len(graphs))
+    batch = [
+        [Workload(g, tuple(a), iterations=i, depends_on=d)
+         for g, a, i, d in zip(graphs, asgs, its, deps)]
+        for asgs in assignments_batch
+    ]
+    return _scalar_simulate_batch(platform, batch, model, validate=validate)
+
+
+register_evaluator(
+    "batch", priority=0,
+    simulate=simulate,                       # single candidates stay scalar
+    simulate_batch=_sb.simulate_batch,
+    simulate_assignments=_sb.simulate_assignments,
+    description="NumPy lockstep population evaluator (core.simulate_batch)")
+register_evaluator(
+    "scalar", priority=10,
+    simulate=simulate,
+    simulate_batch=_scalar_simulate_batch,
+    simulate_assignments=_scalar_simulate_assignments,
+    description="authoritative event-driven simulator, looped per candidate")
 
 
 # ---------------------------------------------------------------------------

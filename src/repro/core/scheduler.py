@@ -20,6 +20,7 @@ shims over one shared Scheduler per (platform, model).
 """
 from __future__ import annotations
 
+import inspect
 import logging
 import time
 from typing import Sequence
@@ -30,7 +31,7 @@ from .contention import ContentionModel, ProportionalShareModel
 from .graph import DNNGraph
 from .plan import (Plan, PlanCache, ScheduleRequest, platform_fingerprint)
 from .profiles import get_graph
-from .simulate import SimResult, Workload, simulate
+from .simulate import SimResult, Workload, simulate, validate_assignment
 
 log = logging.getLogger("repro.core.scheduler")
 
@@ -67,21 +68,42 @@ def _error_row(exc: BaseException) -> dict:
     return {"error": {"type": type(exc).__name__, "message": str(exc)}}
 
 
+def _accepts_kwarg(fn, name: str) -> bool:
+    """True if ``fn`` can be called with keyword argument ``name``."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):          # builtins / C callables
+        return False
+    if name in params:
+        return True
+    return any(p.kind is inspect.Parameter.VAR_KEYWORD
+               for p in params.values())
+
+
 class Scheduler:
     """Holds a resolved platform + contention model; produces cached Plans."""
 
     def __init__(self, platform: str | Platform = "agx-orin",
                  model: ContentionModel | None = None,
-                 cache: PlanCache | None = None):
+                 cache: PlanCache | None = None,
+                 evaluator: str = registry.EVAL_AUTO):
         self.platform = resolve_platform(platform)
         self.model = model or default_model(self.platform)
         self.cache = cache if cache is not None else PlanCache()
+        #: how solvers/compare score candidate schedules: "batch" | "scalar"
+        #: | "auto" (best available).  Not part of the problem identity —
+        #: two evaluators cache under the same request hash; the Plan
+        #: records which one actually searched.
+        if evaluator != registry.EVAL_AUTO:
+            registry.get_evaluator(evaluator)      # raises with known names
+        self.evaluator = evaluator
         #: actual solver invocations (== cache misses that reached a solver).
         self.solves = 0
 
     def __repr__(self) -> str:
         return (f"Scheduler(platform={self.platform.name!r}, "
                 f"model={type(self.model).__name__}, "
+                f"evaluator={self.evaluator!r}, "
                 f"cached={len(self.cache)}, solves={self.solves})")
 
     # ------------------------------------------------------------------
@@ -111,37 +133,54 @@ class Scheduler:
         )
 
     # ------------------------------------------------------------------
-    def resolve(self, request: ScheduleRequest) -> Plan:
-        """Cache-or-solve entry point — every schedule goes through here."""
+    def resolve(self, request: ScheduleRequest, *,
+                evaluator: str | None = None) -> Plan:
+        """Cache-or-solve entry point — every schedule goes through here.
+
+        ``evaluator`` overrides the scheduler-wide knob for this call; it
+        steers *how* solvers score candidates ("batch" population scoring
+        vs the looped "scalar" authoritative path), never *what* problem is
+        solved, so it does not participate in the request hash.
+        """
         h = request.request_hash()
         plan = self.cache.get(h)
         if plan is not None:
             log.info("plan cache hit %s (solver=%s, %.3fs solve amortized)",
                      h[:12], plan.solver, plan.solve_time_s)
             return plan
-        kind, sol, dt = self._dispatch(request)
+        ev = registry.resolve_evaluator(evaluator or self.evaluator).name
+        kind, sol, dt = self._dispatch(request, ev)
         self.solves += 1
         plan = Plan(request=request, solution=sol, solver=kind,
                     solve_time_s=dt, request_hash=h,
                     platform_fingerprint=platform_fingerprint(
-                        request.platform))
+                        request.platform),
+                    evaluator=ev)
         self.cache.put(plan)
-        log.info("solved %s with %s in %.3fs (%s=%.6g, optimal=%s)",
-                 h[:12], kind, dt, sol.kind, sol.objective, sol.optimal)
+        log.info("solved %s with %s/%s in %.3fs (%s=%.6g, optimal=%s)",
+                 h[:12], kind, ev, dt, sol.kind, sol.objective, sol.optimal)
         return plan
 
-    def _dispatch(self, request: ScheduleRequest):
+    def _dispatch(self, request: ScheduleRequest, evaluator: str):
         errors = []
         for entry in registry.dispatch_order(request.solver):
             t0 = time.perf_counter()
+            kwargs = dict(
+                objective=request.objective,
+                max_transitions=request.max_transitions,
+                iterations=list(request.iterations),
+                depends_on=list(request.depends_on),
+                deadline_s=request.deadline_s)
+            if _accepts_kwarg(entry.fn, "evaluator"):
+                kwargs["evaluator"] = evaluator
+            else:
+                # third-party solvers registered against the pre-evaluator
+                # signature keep working; they just search their own way.
+                log.debug("solver %s does not accept evaluator=; skipping",
+                          entry.name)
             try:
-                sol = entry.fn(
-                    request.platform, list(request.graphs), request.model,
-                    objective=request.objective,
-                    max_transitions=request.max_transitions,
-                    iterations=list(request.iterations),
-                    depends_on=list(request.depends_on),
-                    deadline_s=request.deadline_s)
+                sol = entry.fn(request.platform, list(request.graphs),
+                               request.model, **kwargs)
             except ValueError as exc:
                 # e.g. exhaustive search space too large: degrade down the
                 # registry's priority order (z3 -> bb -> greedy).
@@ -155,9 +194,11 @@ class Scheduler:
             f": {'; '.join(errors)}")
 
     def solve(self, dnns: Sequence[str | DNNGraph],
-              objective: str = "latency", **kwargs) -> Plan:
+              objective: str = "latency", *,
+              evaluator: str | None = None, **kwargs) -> Plan:
         """Request + resolve in one call (kwargs as in :meth:`request`)."""
-        return self.resolve(self.request(dnns, objective, **kwargs))
+        return self.resolve(self.request(dnns, objective, **kwargs),
+                            evaluator=evaluator)
 
     # ------------------------------------------------------------------
     def evaluate_baseline(self, name: str, dnns: Sequence[str | DNNGraph],
@@ -172,6 +213,56 @@ class Scheduler:
             depends_on=depends_on)
         return wls, simulate(self.platform, wls, model or self.model)
 
+    def evaluate_baselines(self, dnns: Sequence[str | DNNGraph], *,
+                           model: ContentionModel | None = None,
+                           iterations: Sequence[int] | None = None,
+                           depends_on: Sequence[int | None] | None = None,
+                           evaluator: str | None = None,
+                           ) -> dict[str, SimResult | dict]:
+        """Evaluate *every* registered baseline in one batch pass.
+
+        Rows that fail to build or validate become structured
+        ``{"error": ...}`` dicts (see :func:`failed`); the rest are scored
+        together through the selected evaluator's batch path — one
+        vectorized sweep instead of one event-driven run per baseline.
+        """
+        graphs = self.graphs(dnns)
+        entry = registry.resolve_evaluator(evaluator or self.evaluator)
+        rows: dict[str, SimResult | dict] = {}
+        built: list[tuple[str, list[Workload]]] = []
+        for name in registry.baseline_names():
+            try:
+                wls = registry.get_baseline(name)(
+                    self.platform, graphs, iterations=iterations,
+                    depends_on=depends_on)
+                for wl in wls:
+                    validate_assignment(self.platform, wl)
+            except (ValueError, KeyError, RuntimeError) as exc:
+                rows[name] = _error_row(exc)
+            else:
+                built.append((name, wls))
+        if built:
+            try:
+                bt = entry.simulate_batch(
+                    self.platform, [wls for _, wls in built],
+                    model or self.model, validate=False)
+            except (ValueError, KeyError, RuntimeError) as exc:
+                # one pathological candidate fails the whole batch call —
+                # degrade to per-row scalar evaluation so the failure stays
+                # a structured row instead of taking down the sweep.
+                log.warning("batch baseline sweep failed (%s); retrying "
+                            "row-by-row through the scalar simulator", exc)
+                for name, wls in built:
+                    try:
+                        rows[name] = simulate(self.platform, wls,
+                                              model or self.model)
+                    except (ValueError, KeyError, RuntimeError) as row_exc:
+                        rows[name] = _error_row(row_exc)
+            else:
+                for i, (name, _) in enumerate(built):
+                    rows[name] = bt.result(i)
+        return rows
+
     def compare(self, dnns: Sequence[str | DNNGraph],
                 objective: str = "latency", *,
                 model: ContentionModel | None = None,
@@ -180,29 +271,27 @@ class Scheduler:
                 iterations: Sequence[int] | None = None,
                 depends_on: Sequence[int | None] | None = None,
                 deadline_s: float | None = 20.0,
+                evaluator: str | None = None,
                 ) -> dict[str, SimResult | Plan | dict]:
         """HaX-CoNN vs. every registered baseline (Table-6 row shape).
 
-        Baseline rows are :class:`SimResult`; the ``"haxconn"`` row is a
-        :class:`Plan`.  A failing row is recorded as a structured
-        ``{"error": {"type", "message"}}`` dict (see :func:`failed`) so
-        "infeasible on this platform" is distinguishable from "crashed".
+        Baseline rows are :class:`SimResult` (scored through the batch
+        evaluator in one sweep); the ``"haxconn"`` row is a :class:`Plan`.
+        A failing row is recorded as a structured ``{"error": {"type",
+        "message"}}`` dict (see :func:`failed`) so "infeasible on this
+        platform" is distinguishable from "crashed".
         """
         graphs = self.graphs(dnns)
-        rows: dict[str, SimResult | Plan | dict] = {}
-        for name in registry.baseline_names():
-            try:
-                _, res = self.evaluate_baseline(
-                    name, graphs, model=model, iterations=iterations,
-                    depends_on=depends_on)
-                rows[name] = res
-            except (ValueError, KeyError, RuntimeError) as exc:
-                rows[name] = _error_row(exc)
+        rows: dict[str, SimResult | Plan | dict] = dict(
+            self.evaluate_baselines(
+                graphs, model=model, iterations=iterations,
+                depends_on=depends_on, evaluator=evaluator))
         try:
             rows["haxconn"] = self.solve(
                 graphs, objective, model=model, solver=solver,
                 max_transitions=max_transitions, iterations=iterations,
-                depends_on=depends_on, deadline_s=deadline_s)
+                depends_on=depends_on, deadline_s=deadline_s,
+                evaluator=evaluator)
         except (ValueError, KeyError, RuntimeError,
                 registry.SolverUnavailable) as exc:
             rows["haxconn"] = _error_row(exc)

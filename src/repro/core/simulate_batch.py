@@ -1,0 +1,869 @@
+"""Vectorized batch timeline evaluation: N candidate schedules in one pass.
+
+The exact event-driven simulator in :mod:`repro.core.simulate` is the
+authoritative evaluator of the paper's Eq. 2-8 timeline, but it walks one
+candidate schedule at a time — and schedule *search* (greedy hill climb,
+branch-and-bound sibling scoring, the Table-8 exhaustive sweep) is bounded
+by how many candidates it can score per second.  This module evaluates a
+whole population of candidates simultaneously by running the same
+event-driven state machine in *lockstep across candidates*: every piece of
+per-workload simulator state becomes an array over ``candidates ×
+workloads``, and each loop iteration advances every still-running candidate
+to its own next event with a fixed number of NumPy kernels.  Interpreter
+overhead is paid once per event *wave* instead of once per event per
+candidate, which is where the >=10x candidate-evaluation throughput comes
+from (see ``benchmarks/bench_simulate.py`` / ``BENCH_simulate.json``).
+
+Semantics are bit-for-bit the scalar simulator's modulo floating-point
+summation order (guarded to 1e-6 by ``tests/test_simulate_differential.py``):
+
+  * one layer group per accelerator at a time, FIFO by (ready time, index);
+  * inter-accelerator transitions delay the workload without occupying
+    either accelerator;
+  * contention intervals integrate ``1 / slowdown(own, external)`` progress
+    between events, with external demand summed over shared domains;
+  * multi-iteration workloads, ``depends_on`` pipelines and ``arrival_ms``
+    offsets behave identically.
+
+The scalar simulator remains *authoritative*: solvers that search with the
+batch evaluator re-simulate their final incumbent through
+:func:`repro.core.simulate.simulate` before returning it, so a plan's
+recorded result never depends on this fast path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping, Sequence
+
+import numpy as np
+
+from .accelerators import Platform
+from .contention import ContentionModel, PiecewiseModel, ProportionalShareModel
+from .graph import DNNGraph
+from .simulate import SimResult, Workload, validate_assignment
+
+_TOL = 1e-9   # must match simulate._TOL: the differential contract depends
+              # on both simulators resolving events at the same threshold.
+
+
+# ---------------------------------------------------------------------------
+# vectorized slowdown surfaces
+# ---------------------------------------------------------------------------
+
+#: cls -> fn(model, own: ndarray, ext: ndarray) -> ndarray.  Third-party
+#: contention models register here to stay on the fast path; anything
+#: unregistered falls back to an elementwise call of ``model.slowdown``.
+_VECTORIZED: dict[type, Callable[[Any, np.ndarray, np.ndarray], np.ndarray]] = {}
+
+
+def register_vectorized_slowdown(
+        cls: type,
+        fn: Callable[[Any, np.ndarray, np.ndarray], np.ndarray],
+        replace: bool = False) -> None:
+    """Register a NumPy implementation of ``cls.slowdown`` for the batch path."""
+    if cls in _VECTORIZED and not replace:
+        raise ValueError(f"vectorized slowdown for {cls.__name__} already "
+                         f"registered")
+    _VECTORIZED[cls] = fn
+
+
+def _proportional_share(m: ProportionalShareModel, own: np.ndarray,
+                        ext: np.ndarray) -> np.ndarray:
+    own = np.maximum(0.0, own)
+    ext = np.maximum(0.0, ext)
+    total = own + ext
+    boundedness = np.minimum(1.0, own / m.capacity)
+    dilation = total / m.capacity
+    s = 1.0 + m.sensitivity * boundedness * (dilation - 1.0)
+    return np.where((own == 0.0) | (total <= m.capacity), 1.0, s)
+
+
+def _locate_batch(knots: np.ndarray, x: np.ndarray):
+    """Vectorized PiecewiseModel._locate: (lo, hi, w) per element."""
+    n = len(knots)
+    hi = np.searchsorted(knots, x, side="right")
+    lo = np.clip(hi - 1, 0, n - 1)
+    hi = np.clip(hi, 0, n - 1)
+    below = x <= knots[0]
+    above = x >= knots[-1]
+    lo = np.where(below, 0, np.where(above, n - 1, lo))
+    hi = np.where(below, 0, np.where(above, n - 1, hi))
+    denom = knots[hi] - knots[lo]
+    with np.errstate(invalid="ignore", divide="ignore"):
+        w = np.where(denom > 0, (x - knots[lo]) / np.where(denom > 0, denom, 1.0),
+                     0.0)
+    w = np.where(below | above, 0.0, w)
+    return lo, hi, w
+
+
+def _piecewise(m: PiecewiseModel, own: np.ndarray,
+               ext: np.ndarray) -> np.ndarray:
+    ok = np.asarray(m.own_knots, dtype=float)
+    ek = np.asarray(m.ext_knots, dtype=float)
+    table = np.asarray(m.table, dtype=float)
+    i0, i1, wi = _locate_batch(ok, own)
+    j0, j1, wj = _locate_batch(ek, ext)
+    v0 = table[i0, j0] * (1 - wj) + table[i0, j1] * wj
+    v1 = table[i1, j0] * (1 - wj) + table[i1, j1] * wj
+    s = v0 * (1 - wi) + v1 * wi
+    return np.where((own <= 0.0) | (ext <= 0.0), 1.0, s)
+
+
+register_vectorized_slowdown(ProportionalShareModel, _proportional_share)
+register_vectorized_slowdown(PiecewiseModel, _piecewise)
+
+
+def slowdown_array(model: Any, own: np.ndarray, ext: np.ndarray) -> np.ndarray:
+    """Vectorized ``model.slowdown`` over equal-shaped demand arrays.
+
+    Uses the registered NumPy surface when the model class has one and an
+    elementwise fallback otherwise — slower, but any object with a scalar
+    ``slowdown`` stays usable (and *correct*) from every batch call site.
+    """
+    fn = _VECTORIZED.get(type(model))
+    if fn is not None:
+        return fn(model, own, ext)
+    flat_own = np.asarray(own, dtype=float).ravel()
+    flat_ext = np.asarray(ext, dtype=float).ravel()
+    out = np.fromiter((model.slowdown(float(o), float(e))
+                       for o, e in zip(flat_own, flat_ext)),
+                      dtype=float, count=flat_own.size)
+    return out.reshape(np.shape(own))
+
+
+# ---------------------------------------------------------------------------
+# BatchTimeline
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BatchTimeline:
+    """Per-candidate timeline results of one :func:`simulate_batch` call.
+
+    Arrays are indexed ``[candidate]`` / ``[candidate, workload]``; iteration
+    latencies are padded with NaN beyond each workload's iteration count.
+    """
+
+    #: (N,) total schedule span per candidate (max workload finish time).
+    makespan: np.ndarray
+    #: (N, W) completion time of every workload.
+    finish_times: np.ndarray
+    #: (N, W, max_iters) per-iteration service latency, NaN-padded.
+    iteration_latencies: np.ndarray
+    #: (N, W) number of iterations each workload ran.
+    iterations: np.ndarray
+    #: (N,) wall-clock ms added purely by contention per candidate.
+    contention_ms: np.ndarray
+    #: (N, A) contention-free busy ms per accelerator.
+    busy_ms: np.ndarray
+    #: accelerator names indexing the last axis of ``busy_ms``.
+    acc_names: tuple[str, ...]
+
+    def __len__(self) -> int:
+        return int(self.makespan.shape[0])
+
+    @property
+    def n_candidates(self) -> int:
+        return len(self)
+
+    @property
+    def throughput_fps(self) -> np.ndarray:
+        """(N,) completed DNN inferences per second per candidate."""
+        n = self.iterations.sum(axis=1)
+        with np.errstate(divide="ignore"):
+            fps = np.where(self.makespan > 0, 1e3 * n / self.makespan,
+                           np.inf)
+        return fps
+
+    def objective(self, kind: str) -> np.ndarray:
+        """(N,) solver objective per candidate; lower is better for every
+        kind — mirrors :meth:`repro.core.simulate.SimResult.objective`."""
+        if kind == "latency":
+            return self.makespan.copy()
+        if kind == "throughput":
+            return -self.throughput_fps
+        if kind == "sum_inverse":
+            with np.errstate(divide="ignore"):
+                inv = np.where(self.finish_times > 0,
+                               1.0 / self.finish_times, 0.0)
+            return -inv.sum(axis=1)
+        raise ValueError(kind)
+
+    def argbest(self, kind: str) -> int:
+        """Index of the best candidate (first among exact ties)."""
+        return int(np.argmin(self.objective(kind)))
+
+    def result(self, i: int) -> SimResult:
+        """Extract candidate ``i`` as a scalar-shaped :class:`SimResult`.
+
+        The interval-level ``timeline`` is not materialized by the batch
+        path (it exists to explain one schedule, not to rank thousands);
+        re-simulate the winner through the authoritative scalar simulator
+        when a Gantt-grade timeline is needed.
+        """
+        lats = [
+            [float(x) for x in row[:int(self.iterations[i, n])]]
+            for n, row in enumerate(self.iteration_latencies[i])
+        ]
+        return SimResult(
+            makespan=float(self.makespan[i]),
+            finish_times=[float(x) for x in self.finish_times[i]],
+            iteration_latencies=lats,
+            timeline=[],
+            contention_ms=float(self.contention_ms[i]),
+            busy_ms={a: float(self.busy_ms[i, j])
+                     for j, a in enumerate(self.acc_names)},
+        )
+
+    def results(self) -> list[SimResult]:
+        return [self.result(i) for i in range(len(self))]
+
+
+def batch_from_results(results: Sequence[SimResult],
+                       acc_names: Sequence[str]) -> BatchTimeline:
+    """Assemble a :class:`BatchTimeline` from scalar :class:`SimResult`s.
+
+    This is the "scalar" evaluator's batch implementation: every call site
+    written against the batch interface can fall back to the authoritative
+    simulator without changing shape.
+    """
+    n = len(results)
+    w = max((len(r.finish_times) for r in results), default=0)
+    maxit = max((max((len(l) for l in r.iteration_latencies), default=0)
+                 for r in results), default=0)
+    lat = np.full((n, w, max(maxit, 1)), np.nan)
+    its = np.zeros((n, w), dtype=np.int64)
+    fin = np.zeros((n, w))
+    for i, r in enumerate(results):
+        fin[i, :len(r.finish_times)] = r.finish_times
+        for j, l in enumerate(r.iteration_latencies):
+            its[i, j] = len(l)
+            lat[i, j, :len(l)] = l
+    return BatchTimeline(
+        makespan=np.array([r.makespan for r in results]),
+        finish_times=fin,
+        iteration_latencies=lat,
+        iterations=its,
+        contention_ms=np.array([r.contention_ms for r in results]),
+        busy_ms=np.array([[r.busy_ms.get(a, 0.0) for a in acc_names]
+                          for r in results]),
+        acc_names=tuple(acc_names),
+    )
+
+
+# ---------------------------------------------------------------------------
+# packing: Workload lists -> dense candidate arrays
+# ---------------------------------------------------------------------------
+
+class _Packed:
+    """Dense array form of a candidate population (all float64/int64)."""
+
+    __slots__ = ("n", "w", "gmax", "amax", "acc", "dur", "dem", "tau",
+                 "ngroups", "iters", "dep", "arrival", "acc_names",
+                 "domshare", "model_of_acc", "models")
+
+    def __init__(self, platform: Platform, n: int, w: int, gmax: int,
+                 model: ContentionModel | Mapping[str, ContentionModel]):
+        acc_names = list(platform.names)
+        acc_idx = {a: j for j, a in enumerate(acc_names)}
+        self.n, self.w, self.gmax = n, w, gmax
+        self.amax = len(acc_names)
+        self.acc_names = tuple(acc_names)
+        self.acc = np.zeros((n, w, gmax), dtype=np.int64)
+        self.dur = np.zeros((n, w, gmax))
+        self.dem = np.zeros((n, w, gmax))
+        self.tau = np.zeros((n, w, gmax))
+        self.ngroups = np.zeros((n, w), dtype=np.int64)
+        self.iters = np.ones((n, w), dtype=np.int64)
+        self.dep = np.full((n, w), -1, dtype=np.int64)
+        self.arrival = np.zeros((n, w))
+
+        # domain-share matrix: domshare[a, b] = number of contention domains
+        # containing both accelerators (diagonal zero) — external demand seen
+        # by a layer on `a` is sum_b demand_b * domshare[a, b], replicating
+        # the scalar simulator's per-domain accumulation.
+        ds = np.zeros((self.amax, self.amax))
+        for members in platform.domains.values():
+            idxs = [acc_idx[m] for m in members]
+            for i in idxs:
+                for j in idxs:
+                    if i != j:
+                        ds[i, j] += 1.0
+        self.domshare = ds
+
+        # per-accelerator contention model (the scalar simulator uses the
+        # model of the accelerator's *first* domain).
+        if hasattr(model, "slowdown"):
+            models: dict[str, Any] = {d: model for d in platform.domains}
+            if not models:
+                models = {"_": model}
+        else:
+            models = dict(model)  # type: ignore[arg-type]
+        first_domain: dict[str, str] = {}
+        for dom, members in platform.domains.items():
+            for m in members:
+                first_domain.setdefault(m, dom)
+        self.models = []
+        self.model_of_acc = np.full(self.amax, -1, dtype=np.int64)
+        seen: dict[int, int] = {}
+        for j, a in enumerate(acc_names):
+            dom = first_domain.get(a)
+            if dom is None:
+                continue  # never contends: slowdown is never evaluated
+            mod = models.get(dom)
+            if mod is None:
+                # scalar simulate would KeyError on first contention; defer
+                # identically by leaving the slot unmodeled.
+                continue
+            key = id(mod)
+            if key not in seen:
+                seen[key] = len(self.models)
+                self.models.append(mod)
+            self.model_of_acc[j] = seen[key]
+
+
+def _pack_workloads(platform: Platform,
+                    workloads_batch: Sequence[Sequence[Workload]],
+                    model: ContentionModel | Mapping[str, ContentionModel],
+                    validate: bool) -> _Packed:
+    """Generic packing: per-candidate Workload lists (graphs may differ)."""
+    acc_idx = {a: j for j, a in enumerate(platform.names)}
+    n = len(workloads_batch)
+    w = len(workloads_batch[0])
+    for c, wls in enumerate(workloads_batch):
+        if len(wls) != w:
+            raise ValueError(
+                f"candidate {c} has {len(wls)} workloads, expected {w} "
+                f"(all candidates of a batch share the workload count)")
+    gmax = max(len(wl.graph) for wls in workloads_batch for wl in wls)
+    p = _Packed(platform, n, w, gmax, model)
+    for c, wls in enumerate(workloads_batch):
+        for m, wl in enumerate(wls):
+            if validate:
+                validate_assignment(platform, wl)
+            g = wl.graph
+            ng = len(g)
+            p.ngroups[c, m] = ng
+            p.iters[c, m] = wl.iterations
+            p.dep[c, m] = -1 if wl.depends_on is None else wl.depends_on
+            p.arrival[c, m] = wl.arrival_ms
+            asg = wl.assignment
+            for i in range(ng):
+                a = asg[i]
+                p.acc[c, m, i] = acc_idx[a]
+                p.dur[c, m, i] = g[i].time_on(a)
+                p.dem[c, m, i] = g[i].demand_on(a)
+                if i + 1 < ng:
+                    p.tau[c, m, i] = platform.transition_cost_ms(
+                        g[i].out_bytes, a, asg[i + 1])
+    return p
+
+
+def _graph_arrays(platform: Platform, g: DNNGraph,
+                  arr: np.ndarray, validate: bool):
+    """Vectorized per-graph fill: assignment string array (K, len(g)) ->
+    (acc idx, duration, demand, post-group transition delay) arrays."""
+    names = list(platform.names)
+    a_cnt = len(names)
+    ng = len(g)
+    if arr.shape[1:] != (ng,):
+        raise ValueError(
+            f"graph {g.name!r}: assignment shape {arr.shape} != (*, {ng})")
+    time_t = np.full((ng, a_cnt), np.nan)
+    dem_t = np.zeros((ng, a_cnt))
+    legal = np.zeros(ng, dtype=bool)
+    out_b = np.zeros(ng)
+    for i, grp in enumerate(g):
+        legal[i] = grp.can_transition_after
+        out_b[i] = grp.out_bytes
+        for a, tv in grp.times.items():
+            if a in names:
+                time_t[i, names.index(a)] = float(tv)
+        for a, dv in grp.mem_demand.items():
+            if a in names:
+                dem_t[i, names.index(a)] = float(dv)
+    tau_pair = np.zeros((a_cnt, a_cnt))
+    for si, src in enumerate(names):
+        for di, dst in enumerate(names):
+            if si != di:
+                tau_pair[si, di] = (platform.acc(src).transition_out_ms
+                                    + platform.acc(dst).transition_in_ms)
+    move = (out_b / platform.transition_bw / 1e-3
+            if platform.transition_bw else np.zeros(ng))
+
+    sorted_names = sorted(names)
+    to_idx = np.argsort(np.array(names))            # sorted pos -> acc index
+    pos = np.clip(np.searchsorted(sorted_names, arr), 0, a_cnt - 1)
+    idx = to_idx[pos]
+    if validate and not (np.asarray(names)[idx] == arr).all():
+        bad = arr[np.asarray(names)[idx] != arr].ravel()[0]
+        raise ValueError(f"{g.name}: unknown accelerator {bad!r}")
+    gi = np.arange(ng)
+    dur = time_t[gi[None, :], idx]
+    if validate and np.isnan(dur).any():
+        ci, gix = np.nonzero(np.isnan(dur))
+        raise ValueError(
+            f"{g.name}[{gix[0]}] cannot run on {arr[ci[0], gix[0]]!r}")
+    dem = dem_t[gi[None, :], idx]
+    tau = np.zeros_like(dur)
+    if ng > 1:
+        moved = idx[:, :-1] != idx[:, 1:]
+        if validate and (moved & ~legal[None, :-1]).any():
+            ci, gix = np.nonzero(moved & ~legal[None, :-1])
+            raise ValueError(
+                f"{g.name}: illegal transition after group {gix[0]} "
+                f"({g[gix[0]].name})")
+        tau[:, :-1] = np.where(
+            moved, move[None, :-1] + tau_pair[idx[:, :-1], idx[:, 1:]], 0.0)
+    return idx, np.nan_to_num(dur), dem, tau
+
+
+def _set_static_columns(p: _Packed, iterations: Sequence[int],
+                        depends_on: Sequence[int | None]) -> None:
+    p.iters[:] = np.asarray(list(iterations), dtype=np.int64)[None, :]
+    p.dep[:] = np.asarray([-1 if d is None else d for d in depends_on],
+                          dtype=np.int64)[None, :]
+
+
+def _pack_assignments(platform: Platform, graphs: Sequence[DNNGraph],
+                      assignments_batch: Sequence[Sequence[Sequence[str]]],
+                      model: ContentionModel | Mapping[str, ContentionModel],
+                      iterations: Sequence[int],
+                      depends_on: Sequence[int | None],
+                      validate: bool) -> _Packed:
+    """Solver hot-path packing: fixed graphs, N assignment vectors.
+
+    Per-graph (group, accelerator) lookup tables are built once and every
+    candidate is filled by vectorized gathers — no per-candidate Python
+    loop, which is what keeps huge sweeps pack-bound on NumPy rather than
+    the interpreter.
+    """
+    n = len(assignments_batch)
+    w = len(graphs)
+    gmax = max(len(g) for g in graphs)
+    p = _Packed(platform, n, w, gmax, model)
+    _set_static_columns(p, iterations, depends_on)
+    for m, g in enumerate(graphs):
+        ng = len(g)
+        p.ngroups[:, m] = ng
+        arr = np.asarray([asgs[m] for asgs in assignments_batch])
+        idx, dur, dem, tau = _graph_arrays(platform, g, arr, validate)
+        p.acc[:, m, :ng] = idx
+        p.dur[:, m, :ng] = dur
+        p.dem[:, m, :ng] = dem
+        p.tau[:, m, :ng] = tau
+    return p
+
+
+def _pack_product(platform: Platform, graphs: Sequence[DNNGraph],
+                  cand_lists: Sequence[Sequence[Sequence[str]]],
+                  model: ContentionModel | Mapping[str, ContentionModel],
+                  iterations: Sequence[int],
+                  depends_on: Sequence[int | None],
+                  validate: bool) -> _Packed:
+    """Pack the full cross product of per-graph candidate lists without
+    materializing the combinations: each graph's unique assignments are
+    packed once, then broadcast into the product in ``itertools.product``
+    order by pure index arithmetic."""
+    w = len(graphs)
+    ks = [len(c) for c in cand_lists]
+    n = 1
+    for k in ks:
+        n *= k
+    gmax = max(len(g) for g in graphs)
+    p = _Packed(platform, n, w, gmax, model)
+    _set_static_columns(p, iterations, depends_on)
+    after = n
+    for m, g in enumerate(graphs):
+        ng = len(g)
+        p.ngroups[:, m] = ng
+        arr = np.asarray(list(cand_lists[m]))
+        idx, dur, dem, tau = _graph_arrays(platform, g, arr, validate)
+        # itertools.product order: graph m's index repeats `after` times
+        # within one period and the whole period tiles `before` times.
+        after //= ks[m]
+        sel = np.tile(np.repeat(np.arange(ks[m]), after), n // (ks[m] * after))
+        p.acc[:, m, :ng] = idx[sel]
+        p.dur[:, m, :ng] = dur[sel]
+        p.dem[:, m, :ng] = dem[sel]
+        p.tau[:, m, :ng] = tau[sel]
+    return p
+
+
+# ---------------------------------------------------------------------------
+# the lockstep event loop
+# ---------------------------------------------------------------------------
+
+def _empty_batch(platform: Platform) -> BatchTimeline:
+    return BatchTimeline(
+        makespan=np.zeros(0), finish_times=np.zeros((0, 0)),
+        iteration_latencies=np.zeros((0, 0, 1)),
+        iterations=np.zeros((0, 0), dtype=np.int64),
+        contention_ms=np.zeros(0),
+        busy_ms=np.zeros((0, len(platform.names))),
+        acc_names=tuple(platform.names))
+
+
+def simulate_batch(
+    platform: Platform,
+    workloads_batch: Sequence[Sequence[Workload]],
+    model: ContentionModel | Mapping[str, ContentionModel],
+    validate: bool = True,
+) -> BatchTimeline:
+    """Simulate N candidate schedules in one vectorized pass.
+
+    ``workloads_batch[c]`` is candidate ``c``'s workload list; candidates
+    must agree on the number of workloads but may differ in assignments,
+    graphs, iterations, dependencies and arrival offsets.  Returns a
+    :class:`BatchTimeline` whose per-candidate values match the scalar
+    simulator within floating-point summation order (see
+    ``tests/test_simulate_differential.py``).
+    """
+    if len(workloads_batch) == 0:
+        return _empty_batch(platform)
+    return _run(_pack_workloads(platform, workloads_batch, model, validate))
+
+
+def _col_reduce(ufunc, arr: np.ndarray) -> np.ndarray:
+    """Reduce (N, W) along axis 1 via W-1 vectorized column ops.
+
+    NumPy's ``arr.min(axis=1)``/``.any(axis=1)`` degenerate to a Python-side
+    outer loop when the reduced axis is tiny (W is 2-4 here) — column-wise
+    reduction keeps every op SIMD-width over N instead.
+    """
+    if arr.shape[1] == 1:
+        return arr[:, 0].copy()    # never alias mutable state
+    out = ufunc(arr[:, 0], arr[:, 1])
+    for j in range(2, arr.shape[1]):
+        out = ufunc(out, arr[:, j])
+    return out
+
+
+def _run(p: _Packed) -> BatchTimeline:
+    n, w, a_cnt = p.n, p.w, p.amax
+    n0 = n
+    rows = np.arange(n)
+    #: live position -> original candidate id (identity until compaction).
+    orig = np.arange(n)
+
+    # mutable per-(candidate, workload) state — the scalar _WorkloadState
+    # fields as arrays.  cur_acc/own are maintained incrementally (they only
+    # change at group/iteration boundaries) to keep the per-wave kernel
+    # count down.
+    group = np.zeros((n, w), dtype=np.int64)
+    cur_acc = p.acc[:, :, 0].copy()
+    own = p.dem[:, :, 0].copy()
+    remaining = p.dur[:, :, 0].copy()
+    ready = p.arrival.copy()
+    it = np.zeros((n, w), dtype=np.int64)
+    it_start = p.arrival.copy()
+    started = np.zeros((n, w), dtype=bool)
+    done = np.zeros((n, w), dtype=bool)
+    is_run = np.zeros((n, w), dtype=bool)
+    run_wl = np.full((n, a_cnt), -1, dtype=np.int64)
+    t = np.zeros(n)
+
+    # outputs stay full-size, indexed by original candidate id.
+    max_it = int(p.iters.max())
+    iters_full = p.iters.copy()
+    finish = np.zeros((n0, w))
+    lat = np.full((n0, w, max_it), np.nan)
+    contention = np.zeros(n0)
+    busy = np.zeros((n0, a_cnt))
+
+    # same guard shape as the scalar simulator, summed across the batch
+    # (each lockstep wave advances at least one event or idle jump in every
+    # still-alive candidate).
+    per_cand = 200000 + 200 * (p.ngroups * p.iters).sum(axis=1)
+    max_waves = int(per_cand.sum())
+    guard = 0
+
+    inf = np.inf
+    alive = ~done.all(axis=1)
+    n_alive = n
+    while n_alive:
+        guard += 1
+        if guard > max_waves:
+            raise RuntimeError("batch simulator did not converge "
+                               "(event storm)")
+
+        if n >= 1024 and n_alive <= n // 2:
+            # compact: candidates finish at wildly different wave counts in
+            # heterogeneous sweeps; dropping finished rows keeps every wave
+            # proportional to live work instead of the original batch size.
+            keep = np.nonzero(alive)[0]
+            orig = orig[keep]
+            t = t[keep]
+            group, cur_acc, own = group[keep], cur_acc[keep], own[keep]
+            remaining, ready = remaining[keep], ready[keep]
+            it, it_start = it[keep], it_start[keep]
+            started, done, is_run = started[keep], done[keep], is_run[keep]
+            run_wl = run_wl[keep]
+            alive = alive[keep]
+            p.acc, p.dur = p.acc[keep], p.dur[keep]
+            p.dem, p.tau = p.dem[keep], p.tau[keep]
+            p.ngroups, p.iters = p.ngroups[keep], p.iters[keep]
+            p.dep, p.arrival = p.dep[keep], p.arrival[keep]
+            n = len(keep)
+            rows = np.arange(n)
+
+        # 1) FIFO claim: eligible waiting workloads sorted by (ready, idx)
+        # take their accelerator if free.
+        dep_row = np.clip(p.dep, 0, w - 1)
+        dep_ok = ((p.dep < 0)
+                  | done[rows[:, None], dep_row]
+                  | (it[rows[:, None], dep_row] > it))
+        eligible = (alive[:, None] & ~done & ~is_run & dep_ok
+                    & (ready <= t[:, None] + _TOL))
+        if eligible.any():
+            key = np.where(eligible, ready, inf)
+            if w == 2:
+                # stable (ready, idx) order without an axis-1 argsort
+                second_first = key[:, 1] < key[:, 0]
+                order = np.empty((n, 2), dtype=np.int64)
+                order[:, 0] = second_first
+                order[:, 1] = ~second_first
+            else:
+                order = np.argsort(key, axis=1, kind="stable")
+            for r in range(w):
+                w_r = order[:, r]
+                el = eligible[rows, w_r]
+                if not el.any():
+                    continue
+                a_r = cur_acc[rows, w_r]
+                claim = el & (run_wl[rows, a_r] < 0)
+                if claim.any():
+                    cc = rows[claim]
+                    run_wl[cc, a_r[claim]] = w_r[claim]
+                    is_run[cc, w_r[claim]] = True
+                    fresh = (claim & (group[rows, w_r] == 0)
+                             & ~started[rows, w_r])
+                    if fresh.any():
+                        fc = rows[fresh]
+                        it_start[fc, w_r[fresh]] = t[fresh]
+                        started[fc, w_r[fresh]] = True
+
+        any_run = _col_reduce(np.logical_or, is_run)
+        idle = alive & ~any_run
+        if idle.any():
+            # idle gap: jump those candidates to their next arrival /
+            # transition / dependency boundary (they re-claim next wave,
+            # exactly like the scalar simulator's `continue`) while every
+            # running candidate still integrates this wave.
+            pend = np.where(~done & (ready > t[:, None] + _TOL), ready, inf)
+            tmin = _col_reduce(np.minimum, pend)
+            if not np.isfinite(tmin[idle]).all():
+                raise RuntimeError(
+                    "deadlock: nothing running, nothing pending")
+            t = np.where(idle, tmin, t)
+            if not any_run.any():
+                continue
+
+        # 2) per-interval slowdowns — computed on the 1-D running-entry
+        # vectors (rc, rw), not full (N, W) planes.  One accelerator runs
+        # at most one layer, so per-(candidate, acc) demand needs no
+        # accumulation: plain fancy assignment is collision-free.
+        rc, rw = np.nonzero(is_run)
+        run_acc = cur_acc[rc, rw]
+        own_run = own[rc, rw]
+        acc_dem = np.zeros((n, a_cnt))
+        acc_dem[rc, run_acc] = own_run
+        # external demand visible from acc a = sum_b domshare[a, b]·demand_b
+        ext_run = (acc_dem @ p.domshare.T)[rc, run_acc]
+        s_run = np.ones(len(rc))
+        contended = (own_run > 0.0) & (ext_run > 0.0)
+        if contended.any():
+            macc = np.where(contended, p.model_of_acc[run_acc], -1)
+            for mid, mod in enumerate(p.models):
+                m2 = macc == mid
+                if m2.any():
+                    s_run[m2] = np.maximum(
+                        1.0, slowdown_array(mod, own_run[m2], ext_run[m2]))
+            if (contended & (macc < 0)).any():
+                bad = int(run_acc[np.nonzero(contended & (macc < 0))[0][0]])
+                raise KeyError(
+                    f"no contention model covers accelerator "
+                    f"{p.acc_names[bad]!r}")
+
+        # 3) next event horizon: earliest running completion, capped by any
+        # ready/arrival boundary strictly inside the interval.
+        rem_run = remaining[rc, rw]
+        run_rem = np.full((n, w), inf)
+        run_rem[rc, rw] = rem_run * s_run
+        dt = _col_reduce(np.minimum, run_rem)
+        horizon = t + dt
+        cap = _col_reduce(np.minimum, np.where(
+            ~done & ~is_run & (ready > t[:, None] + _TOL)
+            & (ready < horizon[:, None] - _TOL),
+            ready, inf))
+        horizon = np.minimum(horizon, cap)
+
+        # 4) integrate the contention interval.
+        span_run = (horizon - t)[rc]
+        prog = span_run / s_run
+        rem_run = rem_run - prog
+        remaining[rc, rw] = rem_run
+        np.add.at(contention, orig[rc], span_run * (1.0 - 1.0 / s_run))
+        busy[orig[rc], run_acc] += prog   # collision-free: one layer per acc
+        t = np.where(alive & any_run, horizon, t)
+
+        # 5) process completions.
+        fin_run = rem_run <= _TOL
+        if fin_run.any():
+            cc, cw = rc[fin_run], rw[fin_run]
+            run_wl[cc, run_acc[fin_run]] = -1
+            is_run[cc, cw] = False
+
+            g_cur = group[cc, cw]
+            has_next = g_cur + 1 < p.ngroups[cc, cw]
+            if has_next.any():
+                hc, hw = cc[has_next], cw[has_next]
+                tau = p.tau[hc, hw, g_cur[has_next]]
+                g_new = g_cur[has_next] + 1
+                group[hc, hw] = g_new
+                cur_acc[hc, hw] = p.acc[hc, hw, g_new]
+                own[hc, hw] = p.dem[hc, hw, g_new]
+                remaining[hc, hw] = p.dur[hc, hw, g_new]
+                ready[hc, hw] = t[hc] + tau
+
+            if not has_next.all():
+                lc, lw = cc[~has_next], cw[~has_next]
+                it_new = it[lc, lw] + 1
+                lat[orig[lc], lw, it_new - 1] = t[lc] - it_start[lc, lw]
+                it[lc, lw] = it_new
+                started[lc, lw] = False
+                fin = it_new >= p.iters[lc, lw]
+                if fin.any():
+                    fc, fw = lc[fin], lw[fin]
+                    done[fc, fw] = True
+                    finish[orig[fc], fw] = t[fc]
+                if not fin.all():
+                    ac, aw = lc[~fin], lw[~fin]
+                    group[ac, aw] = 0
+                    cur_acc[ac, aw] = p.acc[ac, aw, 0]
+                    own[ac, aw] = p.dem[ac, aw, 0]
+                    remaining[ac, aw] = p.dur[ac, aw, 0]
+                    ready[ac, aw] = t[ac]
+            alive = ~_col_reduce(np.logical_and, done)
+            n_alive = int(alive.sum())
+
+    return BatchTimeline(
+        makespan=finish.max(axis=1),
+        finish_times=finish,
+        iteration_latencies=lat,
+        iterations=iters_full,
+        contention_ms=contention,
+        busy_ms=busy,
+        acc_names=p.acc_names,
+    )
+
+
+def simulate_assignments(
+    platform: Platform,
+    graphs: Sequence[DNNGraph],
+    assignments_batch: Sequence[Sequence[Sequence[str]]],
+    model: ContentionModel | Mapping[str, ContentionModel],
+    iterations: Sequence[int] | None = None,
+    depends_on: Sequence[int | None] | None = None,
+    validate: bool = True,
+) -> BatchTimeline:
+    """Batch-evaluate assignment vectors for fixed graphs, iterations and
+    dependencies — the solver hot-path shape.  Skips Workload object
+    construction entirely: packing is a handful of vectorized gathers."""
+    if len(assignments_batch) == 0:
+        return _empty_batch(platform)
+    its = list(iterations or [1] * len(graphs))
+    deps = list(depends_on or [None] * len(graphs))
+    return _run(_pack_assignments(platform, graphs, assignments_batch,
+                                  model, its, deps, validate))
+
+
+def _concat_packed(packs: Sequence[_Packed]) -> _Packed:
+    """Concatenate per-problem packs along the candidate axis (shared
+    platform/model; same workload count; group axis padded to the max)."""
+    first = packs[0]
+    w = first.w
+    gmax = max(pk.gmax for pk in packs)
+    n = sum(pk.n for pk in packs)
+    out = _Packed.__new__(_Packed)
+    out.n, out.w, out.gmax = n, w, gmax
+    out.amax = first.amax
+    out.acc_names = first.acc_names
+    out.domshare = first.domshare
+    out.models = first.models
+    out.model_of_acc = first.model_of_acc
+
+    def cat(name: str, pad_axis2: bool):
+        parts = []
+        for pk in packs:
+            a = getattr(pk, name)
+            if pad_axis2 and pk.gmax < gmax:
+                pad = np.zeros((pk.n, w, gmax - pk.gmax), dtype=a.dtype)
+                a = np.concatenate([a, pad], axis=2)
+            parts.append(a)
+        setattr(out, name, np.concatenate(parts, axis=0))
+
+    for name in ("acc", "dur", "dem", "tau"):
+        cat(name, True)
+    for name in ("ngroups", "iters", "dep", "arrival"):
+        cat(name, False)
+    return out
+
+
+def simulate_product(
+    platform: Platform,
+    graphs: Sequence[DNNGraph],
+    cand_lists: Sequence[Sequence[Sequence[str]]],
+    model: ContentionModel | Mapping[str, ContentionModel],
+    iterations: Sequence[int] | None = None,
+    depends_on: Sequence[int | None] | None = None,
+    validate: bool = True,
+) -> BatchTimeline:
+    """Evaluate the full cross product of per-graph assignment lists.
+
+    ``cand_lists[m]`` holds graph ``m``'s candidate assignments (e.g. from
+    :func:`repro.core.solver_bb.enumerate_assignments`); candidate ``i`` of
+    the result corresponds to ``list(itertools.product(*cand_lists))[i]``
+    without that list ever being built.
+    """
+    if any(len(c) == 0 for c in cand_lists):
+        return _empty_batch(platform)
+    its = list(iterations or [1] * len(graphs))
+    deps = list(depends_on or [None] * len(graphs))
+    return _run(_pack_product(platform, graphs, cand_lists, model,
+                              its, deps, validate))
+
+
+def simulate_sweep(
+    platform: Platform,
+    problems: Sequence[tuple],
+    model: ContentionModel | Mapping[str, ContentionModel],
+    validate: bool = True,
+) -> tuple[BatchTimeline, list[slice]]:
+    """Evaluate many scheduling problems' candidate populations in ONE pass.
+
+    ``problems[k] = (graphs, cand_lists, iterations, depends_on)`` — e.g.
+    one entry per Table-8 DNN pair with its per-graph exhaustive assignment
+    lists (the cross product is expanded by index arithmetic, in
+    ``itertools.product`` order).  All problems must share the platform,
+    model and workload count; their candidates are concatenated into a
+    single lockstep wave loop, which is where sweep-scale batches amortize
+    the per-wave kernel overhead far beyond what per-problem calls reach.
+
+    Returns the combined :class:`BatchTimeline` plus one ``slice`` per
+    problem addressing its candidates inside the combined arrays.
+    """
+    packs, slices, lo = [], [], 0
+    for graphs, cand_lists, iterations, depends_on in problems:
+        its = list(iterations or [1] * len(graphs))
+        deps = list(depends_on or [None] * len(graphs))
+        pk = _pack_product(platform, graphs, cand_lists, model,
+                           its, deps, validate)
+        packs.append(pk)
+        slices.append(slice(lo, lo + pk.n))
+        lo += pk.n
+    if not packs:
+        return _empty_batch(platform), []
+    if len({pk.w for pk in packs}) != 1:
+        raise ValueError("all problems in a sweep must share the workload "
+                         "count")
+    return _run(_concat_packed(packs)), slices

@@ -7,12 +7,29 @@ schedules in Table 6 all use exactly one transition per DNN, and
 ``max_transitions=len(graph)`` recovers the full space), prunes joint
 combinations with an admissible contention-free lower bound, and evaluates
 survivors with the exact simulator.
+
+Two evaluation backends (the registry ``evaluator`` knob):
+
+* ``"batch"`` (default via ``"auto"``) — lower bounds for the whole joint
+  space are computed vectorized, candidates are visited in ascending-bound
+  order in chunks, and each chunk is scored in one
+  :func:`repro.core.simulate_batch.simulate_assignments` call.  The final
+  incumbent is re-simulated through the authoritative scalar simulator, so
+  the returned :class:`Solution` never depends on the fast path.
+* ``"scalar"`` — the original one-candidate-at-a-time loop.
+
+Both backends visit candidates in the same order and accept the same strict
+improvements, so they return the same schedule (the batch path may score a
+few extra candidates past the scalar path's break point; it can only confirm
+the incumbent).
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
 from typing import Mapping, Sequence
+
+import numpy as np
 
 from .accelerators import Platform
 from .contention import ContentionModel
@@ -97,7 +114,11 @@ def solve(
     iterations: Sequence[int] | None = None,
     depends_on: Sequence[int | None] | None = None,
     max_candidates: int = 2_000_000,
+    evaluator: str = "auto",
+    chunk: int = 512,
 ) -> Solution:
+    from . import registry
+
     its = list(iterations or [1] * len(graphs))
     deps = list(depends_on or [None] * len(graphs))
     cand = [enumerate_assignments(g, platform.names, max_transitions)
@@ -110,6 +131,11 @@ def solve(
             f"search space {total} too large for exhaustive solve; "
             f"reduce max_transitions or merge layer groups"
         )
+
+    entry = registry.resolve_evaluator(evaluator)
+    if entry.name != "scalar":
+        return _solve_batched(entry, platform, graphs, model, objective,
+                              cand, its, deps, total, chunk)
 
     # Order joint candidates by lower bound so the incumbent tightens fast.
     best: Solution | None = None
@@ -134,3 +160,93 @@ def solve(
     assert best is not None
     best.evaluated = evaluated
     return best
+
+
+def _joint_lower_bounds(platform: Platform, graphs: Sequence[DNNGraph],
+                        cand: Sequence[Sequence[tuple[str, ...]]],
+                        its: Sequence[int]) -> np.ndarray:
+    """Vectorized :func:`joint_lower_bound` over the full joint space.
+
+    Returns a flat (prod K_i,) array in C order — i.e. the same order
+    ``itertools.product(*cand)`` enumerates, so a stable argsort reproduces
+    the scalar path's visit order exactly.
+    """
+    names = list(platform.names)
+    a_idx = {a: j for j, a in enumerate(names)}
+    shape = tuple(len(c) for c in cand)
+    w = len(graphs)
+    paths = []            # per graph: (K_i,) critical-path bound
+    loads = []            # per graph: (K_i, A) per-accelerator load
+    for g, clist, it in zip(graphs, cand, its):
+        pl = np.empty(len(clist))
+        ld = np.zeros((len(clist), len(names)))
+        for k, asg in enumerate(clist):
+            pl[k] = lower_bound_time(platform, g, asg) * it
+            for i, a in enumerate(asg):
+                ld[k, a_idx[a]] += g[i].time_on(a) * it
+        paths.append(pl)
+        loads.append(ld)
+
+    def bshape(i: int, trailing: tuple[int, ...] = ()) -> tuple[int, ...]:
+        return tuple(shape[j] if j == i else 1 for j in range(w)) + trailing
+
+    per_dnn = np.zeros(shape)
+    for i in range(w):
+        per_dnn = np.maximum(per_dnn, paths[i].reshape(bshape(i)))
+    load = np.zeros(shape + (len(names),))
+    for i in range(w):
+        load = load + loads[i].reshape(bshape(i, (len(names),)))
+    return np.maximum(per_dnn, load.max(axis=-1)).ravel()
+
+
+def _solve_batched(entry, platform: Platform, graphs: Sequence[DNNGraph],
+                   model, objective: str,
+                   cand: Sequence[Sequence[tuple[str, ...]]],
+                   its: Sequence[int], deps: Sequence[int | None],
+                   total: int, chunk: int) -> Solution:
+    shape = tuple(len(c) for c in cand)
+    lb = _joint_lower_bounds(platform, graphs, cand, its)
+    order = np.argsort(lb, kind="stable")
+    prune = objective in ("latency", "throughput")
+
+    best_flat = -1
+    best_obj = np.inf
+    best_makespan = np.inf
+    evaluated = 0
+    pos = 0
+    while pos < total:
+        take = order[pos:pos + chunk]
+        if best_flat >= 0 and prune:
+            # lb ascending along `order`: candidates at/after the first one
+            # with lb >= incumbent makespan cannot win (both objectives are
+            # monotone in makespan; lb bounds makespan from below).
+            keep = lb[take] < best_makespan - 1e-12
+            if not keep.all():
+                take = take[:int(np.argmin(keep))]
+            if len(take) == 0:
+                break
+        idxs = np.unravel_index(take, shape)
+        asgs_chunk = [[cand[i][idxs[i][j]] for i in range(len(graphs))]
+                      for j in range(len(take))]
+        bt = entry.simulate_assignments(
+            platform, graphs, asgs_chunk, model,
+            iterations=its, depends_on=deps, validate=False)
+        objs = bt.objective(objective)
+        evaluated += len(take)
+        j = int(np.argmin(objs))    # first among ties = scalar visit order
+        if objs[j] < best_obj:
+            best_obj = float(objs[j])
+            best_makespan = float(bt.makespan[j])
+            best_flat = int(take[j])
+        pos += len(take)
+
+    assert best_flat >= 0
+    best_idx = np.unravel_index(best_flat, shape)
+    wls = [Workload(g, tuple(cand[i][best_idx[i]]), iterations=it,
+                    depends_on=dep)
+           for i, (g, it, dep) in enumerate(zip(graphs, its, deps))]
+    # the scalar simulator is authoritative: the recorded result (and the
+    # objective stored with it) never comes from the fast path.
+    res = entry.simulate(platform, wls, model, record_timeline=False)
+    return Solution(wls, res, res.objective(objective), objective,
+                    evaluated, optimal=True)

@@ -7,10 +7,19 @@ returns a valid, contention-scored schedule in polynomial time:
   1. evaluate every baseline scheduler under the *exact* contention
      simulator and take the best one as the incumbent (the same §5.3
      starting point the CEGAR loop uses);
-  2. hill-climb with single-group reassignment moves, accepting only moves
-     the simulator scores as strict improvements, until a sweep over every
-     (workload, group, accelerator) move finds nothing (or ``max_sweeps``
-     is hit).
+  2. improve it with single-group reassignment moves scored by the
+     simulator until no move helps (or the sweep budget is hit).
+
+Two search backends (the registry ``evaluator`` knob):
+
+* ``"batch"`` (default via ``"auto"``) — population hill climb: every legal
+  single-group move of every beam member is scored in one
+  :func:`repro.core.simulate_batch.simulate_assignments` call per step
+  (steepest ascent; ``beam_width > 1`` keeps the best k incumbents alive).
+  The final incumbent is re-simulated through the authoritative scalar
+  simulator before being returned.
+* ``"scalar"`` — the original first-improvement sweep, one scalar
+  simulation per move.
 
 The result is never worse than the best baseline — the never-worse
 guarantee HaX-CoNN claims for its fallback path — but carries no
@@ -19,6 +28,8 @@ optimality certificate (``Solution.optimal`` is always False).
 from __future__ import annotations
 
 from typing import Mapping, Sequence
+
+import numpy as np
 
 from .accelerators import Platform
 from .contention import ContentionModel
@@ -39,31 +50,12 @@ def _legal(graph: DNNGraph, assignment: Sequence[str],
     return max_transitions is None or trans <= max_transitions
 
 
-def solve(
-    platform: Platform,
-    graphs: Sequence[DNNGraph],
-    model: ContentionModel | Mapping[str, ContentionModel],
-    objective: str = "latency",
-    max_transitions: int | None = 3,
-    iterations: Sequence[int] | None = None,
-    depends_on: Sequence[int | None] | None = None,
-    max_sweeps: int = 3,
-):
-    from .solver_bb import Solution
-
-    its = list(iterations or [1] * len(graphs))
-    deps = list(depends_on or [None] * len(graphs))
-
-    def build(assignments):
-        return [Workload(g, tuple(a), iterations=it, depends_on=dep)
-                for g, a, it, dep in zip(graphs, assignments, its, deps)]
-
-    # 1) incumbent: best *registered* baseline under the exact simulator
-    # (registry imported lazily — it registers this module at import time).
+def _baseline_pool(platform, graphs, its, deps, max_transitions):
+    """(name, workloads) for every registered baseline that yields a legal
+    schedule on this platform."""
     from . import registry
 
-    best = None
-    evaluated = 0
+    pool = []
     for name in registry.baseline_names():
         try:
             wls = registry.get_baseline(name)(
@@ -73,13 +65,65 @@ def solve(
         if any(not _legal(w.graph, w.assignment, max_transitions)
                for w in wls):
             continue
+        pool.append((name, wls))
+    if not pool:
+        raise RuntimeError("no baseline produced a valid schedule")
+    return pool
+
+
+def _neighbors(platform: Platform, graphs: Sequence[DNNGraph],
+               asg: tuple[tuple[str, ...], ...],
+               max_transitions: int | None):
+    """All legal single-group reassignments of ``asg``."""
+    for n, g in enumerate(graphs):
+        for i in range(len(g)):
+            for acc in platform.names:
+                if acc == asg[n][i] or acc not in g[i].times:
+                    continue
+                cand = list(asg[n])
+                cand[i] = acc
+                if not _legal(g, cand, max_transitions):
+                    continue
+                yield asg[:n] + (tuple(cand),) + asg[n + 1:]
+
+
+def solve(
+    platform: Platform,
+    graphs: Sequence[DNNGraph],
+    model: ContentionModel | Mapping[str, ContentionModel],
+    objective: str = "latency",
+    max_transitions: int | None = 3,
+    iterations: Sequence[int] | None = None,
+    depends_on: Sequence[int | None] | None = None,
+    max_sweeps: int = 3,
+    evaluator: str = "auto",
+    beam_width: int = 1,
+):
+    from . import registry
+    from .solver_bb import Solution
+
+    its = list(iterations or [1] * len(graphs))
+    deps = list(depends_on or [None] * len(graphs))
+    entry = registry.resolve_evaluator(evaluator)
+    if entry.name != "scalar":
+        return _solve_population(entry, platform, graphs, model, objective,
+                                 max_transitions, its, deps, max_sweeps,
+                                 beam_width)
+
+    def build(assignments):
+        return [Workload(g, tuple(a), iterations=it, depends_on=dep)
+                for g, a, it, dep in zip(graphs, assignments, its, deps)]
+
+    # 1) incumbent: best *registered* baseline under the exact simulator.
+    best = None
+    evaluated = 0
+    for _name, wls in _baseline_pool(platform, graphs, its, deps,
+                                     max_transitions):
         res = simulate(platform, wls, model, record_timeline=False)
         evaluated += 1
         obj = res.objective(objective)
         if best is None or obj < best[0]:
             best = (obj, wls, res)
-    if best is None:
-        raise RuntimeError("no baseline produced a valid schedule")
     obj, wls, res = best
 
     # 2) hill climb: single-group reassignments scored by the simulator.
@@ -110,3 +154,56 @@ def solve(
             break
 
     return Solution(wls, res, obj, objective, evaluated, optimal=False)
+
+
+def _solve_population(entry, platform: Platform, graphs: Sequence[DNNGraph],
+                      model, objective: str, max_transitions: int | None,
+                      its: Sequence[int], deps: Sequence[int | None],
+                      max_sweeps: int, beam_width: int):
+    from .solver_bb import Solution
+
+    # 1) incumbent: all baselines scored in one batch call.
+    pool = _baseline_pool(platform, graphs, its, deps, max_transitions)
+    base_asgs = [tuple(w.assignment for w in wls) for _, wls in pool]
+    bt = entry.simulate_assignments(platform, graphs, base_asgs, model,
+                                    iterations=its, depends_on=deps,
+                                    validate=False)
+    objs = bt.objective(objective)
+    evaluated = len(pool)
+    start = int(np.argmin(objs))
+
+    beam: list[tuple[float, tuple[tuple[str, ...], ...]]] = [
+        (float(objs[start]), base_asgs[start])]
+    seen = {base_asgs[start]}
+
+    # 2) population hill climb: score every legal single-group move of every
+    # beam member in one batch per step; steepest ascent with optional beam.
+    max_steps = max(1, max_sweeps) * sum(len(g) for g in graphs)
+    for _ in range(max_steps):
+        frontier: list[tuple[tuple[str, ...], ...]] = []
+        for _obj, asg in beam:
+            for nb in _neighbors(platform, graphs, asg, max_transitions):
+                if nb not in seen:
+                    seen.add(nb)
+                    frontier.append(nb)
+        if not frontier:
+            break
+        bt = entry.simulate_assignments(platform, graphs, frontier, model,
+                                        iterations=its, depends_on=deps,
+                                        validate=False)
+        objs = bt.objective(objective)
+        evaluated += len(frontier)
+        merged = beam + [(float(o), a) for o, a in zip(objs, frontier)]
+        merged.sort(key=lambda t: t[0])
+        improved = merged[0][0] < beam[0][0] - _EPS
+        beam = merged[:max(1, beam_width)]
+        if not improved:
+            break
+
+    best_asg = beam[0][1]
+    wls = [Workload(g, tuple(a), iterations=it, depends_on=dep)
+           for g, a, it, dep in zip(graphs, best_asg, its, deps)]
+    # scalar re-simulation: the recorded result is authoritative.
+    res = entry.simulate(platform, wls, model, record_timeline=False)
+    return Solution(wls, res, res.objective(objective), objective,
+                    evaluated, optimal=False)

@@ -43,7 +43,8 @@ def _run_gateway(args) -> int:
     gcfg = GatewayConfig(
         platform=tpu_pod_split(4, 12, name="v5e-4x12-split"),
         memory_budget_bytes=budget)
-    scheduler = Scheduler(gcfg.platform, gcfg.model)
+    scheduler = Scheduler(gcfg.platform, gcfg.model,
+                          evaluator=args.evaluator)
     if args.plan:
         loaded = Plan.load(args.plan)
         scheduler.cache.add(loaded)
@@ -108,6 +109,11 @@ def main(argv=None):
                     help="serialize the solved gateway Plan to PATH")
     ap.add_argument("--plan-only", action="store_true",
                     help="plan (and optionally save) without serving")
+    ap.add_argument("--evaluator", default="auto",
+                    choices=("auto", "batch", "scalar"),
+                    help="candidate-schedule evaluator for any fresh solve: "
+                         "vectorized batch path or the authoritative scalar "
+                         "simulator (auto = batch when available)")
     args = ap.parse_args(argv)
 
     if args.plan or args.save_plan or args.plan_only:

@@ -1,21 +1,63 @@
-"""Optional-hypothesis shim for the property-based tests.
+"""Optional-hypothesis shim + shared strategies for the property tests.
 
 When ``hypothesis`` is installed the real ``given``/``settings``/``st`` are
-re-exported unchanged.  When it is missing (the CPU container ships without
-it) the property tests degrade to a deterministic grid of examples instead
-of erroring at collection time: each fallback strategy carries a small fixed
-sample list and ``given`` runs the test body over their (capped) cartesian
-product.  Far weaker than hypothesis — but it keeps every invariant
-exercised and the tier-1 suite collectable everywhere.
+re-exported unchanged and deterministic profiles are registered so property
+tests are reproducible in CI:
+
+* ``default`` — derandomized, no deadline (local + CI fast lane);
+* ``ci``      — derandomized, no deadline, capped example count;
+* ``thorough``— randomized, 5x examples (the scheduled slow CI job runs
+  with ``HYPOTHESIS_PROFILE=thorough``).
+
+When hypothesis is missing (the CPU container ships without it) the property
+tests degrade to a deterministic grid of examples instead of erroring at
+collection time: each fallback strategy carries a small fixed sample list
+and ``given`` runs the test body over their (capped) cartesian product.
+Far weaker than hypothesis — but it keeps every invariant exercised and the
+tier-1 suite collectable everywhere.
+
+This module also hosts the shared *model* strategies for the contention
+metamorphic suite (:func:`proportional_models`, :func:`piecewise_models`,
+:func:`contention_models`) — piecewise surfaces are generated with
+monotone-non-decreasing tables, matching any physically meaningful PCCS
+calibration.
 """
 from __future__ import annotations
 
 import itertools
+import os
+
+from repro.core.contention import PiecewiseModel, ProportionalShareModel
+
+_PROFILE = os.environ.get("HYPOTHESIS_PROFILE", "default")
+#: per-profile multiplier applied by :func:`examples` — explicit
+#: ``@settings(max_examples=...)`` takes precedence over the loaded
+#: profile in hypothesis, so per-test example counts must scale through
+#: this helper for the thorough/ci lanes to mean anything.
+_EXAMPLE_SCALE = {"default": 1.0, "ci": 0.25, "thorough": 5.0}
+
+
+def examples(n: int) -> int:
+    """Per-test example budget, scaled by the active profile (>= 1)."""
+    return max(1, int(n * _EXAMPLE_SCALE.get(_PROFILE, 1.0)))
+
 
 try:
     import hypothesis.strategies as st
-    from hypothesis import given, settings
+    from hypothesis import HealthCheck, given, settings
     HAVE_HYPOTHESIS = True
+
+    settings.register_profile(
+        "default", deadline=None, derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile(
+        "ci", deadline=None, derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile(
+        "thorough", deadline=None, derandomize=False,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile(_PROFILE if _PROFILE in ("default", "ci",
+                                                   "thorough") else "default")
 except ImportError:  # pragma: no cover - exercised only without hypothesis
     HAVE_HYPOTHESIS = False
 
@@ -30,6 +72,41 @@ except ImportError:  # pragma: no cover - exercised only without hypothesis
             span = hi - lo
             return _Strategy([lo, lo + 0.1 * span, lo + 0.5 * span,
                               lo + 0.9 * span, hi])
+
+        @staticmethod
+        def integers(min_value=0, max_value=10, **_kw):
+            lo, hi = int(min_value), int(max_value)
+            span = hi - lo
+            # endpoints plus a spread through the range, deduplicated while
+            # preserving order so small ranges do not repeat values
+            raw = [lo, lo + 1, lo + span // 4, lo + span // 2,
+                   lo + (3 * span) // 4, hi - 1, hi]
+            out, seen = [], set()
+            for v in raw:
+                v = max(lo, min(hi, v))
+                if v not in seen:
+                    seen.add(v)
+                    out.append(v)
+            return _Strategy(out)
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+        @staticmethod
+        def sampled_from(elements):
+            return _Strategy(list(elements))
+
+        @staticmethod
+        def just(value):
+            return _Strategy([value])
+
+        @staticmethod
+        def one_of(*strategies):
+            out = []
+            for s in strategies:
+                out.extend(s.samples)
+            return _Strategy(out)
 
         @staticmethod
         def tuples(*strategies):
@@ -80,3 +157,77 @@ except ImportError:  # pragma: no cover - exercised only without hypothesis
         def deco(fn):
             return fn
         return deco
+
+
+# ---------------------------------------------------------------------------
+# shared contention-model strategies (metamorphic suite, differential suite)
+# ---------------------------------------------------------------------------
+
+def _monotone_piecewise(knot_lo: float, steps: tuple[float, ...],
+                        base: float, row_incs: tuple[float, ...],
+                        col_incs: tuple[float, ...]) -> PiecewiseModel:
+    """Build a PiecewiseModel with strictly increasing knots and a table
+    that is monotone non-decreasing along both axes."""
+    knots = []
+    x = knot_lo
+    for s in steps:
+        knots.append(round(x, 6))
+        x += 0.05 + s
+    n = len(knots)
+    table = []
+    for i in range(n):
+        row = []
+        for j in range(n):
+            v = base
+            for k in range(i + 1):
+                v += row_incs[k % len(row_incs)]
+            for k in range(j + 1):
+                v += col_incs[k % len(col_incs)]
+            row.append(round(max(1.0, v), 9))
+        table.append(tuple(row))
+    return PiecewiseModel(tuple(knots), tuple(knots), tuple(table))
+
+
+if HAVE_HYPOTHESIS:
+    def proportional_models():
+        return st.builds(
+            ProportionalShareModel,
+            capacity=st.floats(0.5, 1.5),
+            sensitivity=st.floats(0.25, 3.0))
+
+    def piecewise_models():
+        inc = st.tuples(st.floats(0.0, 0.4), st.floats(0.0, 0.4),
+                        st.floats(0.0, 0.4))
+        return st.builds(
+            _monotone_piecewise,
+            knot_lo=st.floats(0.05, 0.3),
+            steps=st.tuples(st.floats(0.0, 0.3), st.floats(0.0, 0.3),
+                            st.floats(0.0, 0.3)),
+            base=st.floats(1.0, 1.3),
+            row_incs=inc,
+            col_incs=inc)
+
+    def contention_models():
+        return st.one_of(proportional_models(), piecewise_models())
+else:
+    def proportional_models():
+        return _Strategy([
+            ProportionalShareModel(),
+            ProportionalShareModel(capacity=1.0, sensitivity=3.0),
+            ProportionalShareModel(capacity=0.8, sensitivity=0.5),
+            ProportionalShareModel(capacity=1.4, sensitivity=2.0),
+        ])
+
+    def piecewise_models():
+        return _Strategy([
+            _monotone_piecewise(0.1, (0.1, 0.2, 0.1), 1.0,
+                                (0.1, 0.2, 0.05), (0.05, 0.1, 0.3)),
+            _monotone_piecewise(0.2, (0.0, 0.3, 0.0), 1.2,
+                                (0.0, 0.4, 0.0), (0.2, 0.0, 0.1)),
+            _monotone_piecewise(0.05, (0.25, 0.05, 0.2), 1.1,
+                                (0.3, 0.0, 0.2), (0.0, 0.0, 0.0)),
+        ])
+
+    def contention_models():
+        return _Strategy(proportional_models().samples
+                         + piecewise_models().samples)

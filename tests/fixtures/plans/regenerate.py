@@ -1,0 +1,61 @@
+"""Regenerate the golden Plan fixtures (one per Table-6 scenario type).
+
+Run from the repo root after an *intentional* solver/simulator/profile
+change:
+
+    PYTHONPATH=src python tests/fixtures/plans/regenerate.py
+
+The fixtures pin the full scheduling problem (graphs, platform, contention
+model) plus the solved schedule; ``tests/test_plan_golden.py`` re-solves the
+deserialized request on today's code and asserts identical objectives and
+assignments, so an unintentional behaviour change in the solver or either
+simulator fails loudly.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve()
+                       .parents[3] / "src"))
+
+from repro.core import Scheduler                              # noqa: E402
+from repro.core.profiles import chain, get_graph              # noqa: E402
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+#: fixture name -> (platform, objective, graph builder, iterations, deps)
+#: — one experiment per Table-6 scenario type (§5.2): concurrent (2),
+#: streaming pipeline (3), serial chain + third DNN (4).
+SCENARIOS = {
+    "scenario2-exp1-xavier-vgg19-resnet152": (
+        "xavier-agx", "latency",
+        lambda p: [get_graph("vgg19", p), get_graph("resnet152", p)],
+        [1, 1], [None, None]),
+    "scenario3-exp3-xavier-alexnet-resnet101": (
+        "xavier-agx", "throughput",
+        lambda p: [get_graph("alexnet", p), get_graph("resnet101", p)],
+        [4, 4], [None, 0]),
+    "scenario4-exp8-orin-resnet101-googlenet-inception": (
+        "agx-orin", "latency",
+        lambda p: [chain(get_graph("resnet101", p),
+                         get_graph("googlenet", p)),
+                   get_graph("inception", p)],
+        [1, 1], [None, None]),
+}
+
+
+def main() -> None:
+    for name, (plat, objective, build, its, deps) in SCENARIOS.items():
+        sched = Scheduler(plat)
+        plan = sched.solve(build(sched.platform), objective, solver="bb",
+                           max_transitions=2, iterations=its,
+                           depends_on=deps)
+        path = plan.save(HERE / f"{name}.json")
+        print(f"{path.name}: {plan.solver}/{plan.evaluator} "
+              f"{plan.solution.kind}={plan.objective:.6f} "
+              f"optimal={plan.optimal}")
+
+
+if __name__ == "__main__":
+    main()

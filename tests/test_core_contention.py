@@ -1,11 +1,13 @@
-"""Property-based tests for the contention models (PCCS, §3.3).
+"""Property-based + metamorphic tests for the contention models (PCCS, §3.3).
 
 Runs under hypothesis when installed; degrades to a deterministic example
-grid otherwise (see tests/_prop.py).
+grid otherwise (see tests/_prop.py, which also hosts the shared model
+strategies used here and by the batch/scalar differential suite).
 """
 import pytest
 
-from _prop import given, settings, st
+from _prop import (contention_models, examples, given, piecewise_models,
+                   proportional_models, settings, st)
 
 from repro.core.contention import (PiecewiseModel, ProportionalShareModel,
                                    estimate_blackbox_demand, pccs_from_pairs)
@@ -15,20 +17,20 @@ demand = st.floats(min_value=0.0, max_value=1.5, allow_nan=False)
 
 class TestProportionalShare:
     @given(own=demand, ext=demand)
-    @settings(max_examples=200, deadline=None)
+    @settings(max_examples=examples(200), deadline=None)
     def test_slowdown_at_least_one(self, own, ext):
         m = ProportionalShareModel()
         assert m.slowdown(own, ext) >= 1.0
 
     @given(own=demand, e1=demand, e2=demand)
-    @settings(max_examples=200, deadline=None)
+    @settings(max_examples=examples(200), deadline=None)
     def test_monotone_in_external(self, own, e1, e2):
         m = ProportionalShareModel()
         lo, hi = sorted([e1, e2])
         assert m.slowdown(own, lo) <= m.slowdown(own, hi) + 1e-12
 
     @given(own=demand, ext=demand)
-    @settings(max_examples=200, deadline=None)
+    @settings(max_examples=examples(200), deadline=None)
     def test_no_slowdown_under_capacity(self, own, ext):
         m = ProportionalShareModel(capacity=1.0)
         if own + ext <= 1.0:
@@ -54,7 +56,7 @@ class TestPiecewise:
     )
 
     @given(own=demand, ext=demand)
-    @settings(max_examples=200, deadline=None)
+    @settings(max_examples=examples(200), deadline=None)
     def test_bounded_by_table(self, own, ext):
         s = self.MODEL.slowdown(own, ext)
         assert 1.0 <= s <= 1.9 + 1e-12
@@ -79,6 +81,66 @@ class TestPiecewise:
             PiecewiseModel((0.1, 0.2), (0.1,), ((1.0,),))
 
 
+class TestMetamorphic:
+    """Model-class-independent invariants over the shared strategies."""
+
+    @given(model=contention_models(), own=demand, ext=demand)
+    @settings(max_examples=examples(200), deadline=None)
+    def test_slowdown_at_least_one(self, model, own, ext):
+        assert model.slowdown(own, ext) >= 1.0 - 1e-12
+
+    @given(model=contention_models(), own=demand, e1=demand, e2=demand)
+    @settings(max_examples=examples(200), deadline=None)
+    def test_monotone_nondecreasing_in_external(self, model, own, e1, e2):
+        """More external traffic never speeds a layer up.  Holds for every
+        ProportionalShareModel and for PiecewiseModels with monotone
+        calibration tables (which the shared strategy guarantees — any
+        physically meaningful PCCS surface is monotone)."""
+        lo, hi = sorted([e1, e2])
+        assert model.slowdown(own, lo) <= model.slowdown(own, hi) + 1e-9
+
+    @given(model=contention_models(), own=demand)
+    @settings(max_examples=examples(200), deadline=None)
+    def test_alone_under_capacity_is_free(self, model, own):
+        """slowdown(own, 0) == 1 while own demand fits the domain capacity:
+        a layer running alone is never slowed down."""
+        capacity = getattr(model, "capacity", 1.0)
+        if own <= capacity:
+            assert model.slowdown(own, 0.0) == pytest.approx(1.0)
+
+    @given(model=piecewise_models(), own=demand)
+    @settings(max_examples=examples(100), deadline=None)
+    def test_piecewise_zero_external_is_exactly_one(self, model, own):
+        # PCCS surfaces are only consulted under co-running traffic.
+        assert model.slowdown(own, 0.0) == 1.0
+
+    @given(model=proportional_models())
+    @settings(max_examples=examples(50), deadline=None)
+    def test_tabulated_piecewise_agrees_at_calibration_knots(self, model):
+        """Sampling a ProportionalShareModel onto a PCCS knot grid must
+        reproduce it exactly at the knots (bilinear interpolation is exact
+        there) — the two model classes agree wherever they are calibrated
+        to the same measurements."""
+        knots = (0.2, 0.5, 0.8, 1.1)
+        table = tuple(
+            tuple(max(1.0, model.slowdown(o, e)) for e in knots)
+            for o in knots)
+        pw = PiecewiseModel(knots, knots, table)
+        for o in knots:
+            for e in knots:
+                assert pw.slowdown(o, e) == pytest.approx(
+                    max(1.0, model.slowdown(o, e)), abs=1e-9)
+
+    @given(model=proportional_models(), o1=demand, o2=demand, ext=demand)
+    @settings(max_examples=examples(200), deadline=None)
+    def test_proportional_monotone_in_own_demand(self, model, o1, o2, ext):
+        """A more bandwidth-hungry layer suffers at least as much from the
+        same external traffic (boundedness and dilation both grow)."""
+        lo, hi = sorted([o1, o2])
+        if lo > 0.0:
+            assert model.slowdown(lo, ext) <= model.slowdown(hi, ext) + 1e-9
+
+
 class TestBlackboxEstimation:
     def test_proportional_scaling(self):
         # §3.3: DSA demand = GPU demand * (EMC_dsa / EMC_gpu)
@@ -94,7 +156,7 @@ class TestFitting:
         st.tuples(st.floats(0.05, 1.0), st.floats(0.05, 1.0),
                   st.floats(1.0, 3.0)),
         min_size=3, max_size=20))
-    @settings(max_examples=50, deadline=None)
+    @settings(max_examples=examples(50), deadline=None)
     def test_fit_produces_valid_model(self, data):
         m = pccs_from_pairs(data)
         for own in (0.1, 0.5, 0.9):

@@ -267,6 +267,50 @@ class TestCompareErrorRows:
         for name in registry.baseline_names():
             assert not failed(rows[name])
 
+    def test_simulate_time_failure_is_structured_not_fatal(self):
+        # a model that crashes inside the simulator must degrade to
+        # per-row error dicts, not take down the whole compare() sweep
+        class Exploding:
+            def slowdown(self, own, external):
+                raise RuntimeError("boom at simulate time")
+
+            def __repr__(self):
+                return "Exploding()"
+
+        sched = Scheduler("xavier-agx", model=Exploding())
+        rows = sched.compare(DNNS, "latency", max_transitions=1,
+                             solver="greedy")
+        # the sweep survives and every baseline has a row: contention-free
+        # ones (fastest_only never calls slowdown) succeed, concurrent ones
+        # fail as structured RuntimeError rows, not an exception
+        assert set(registry.baseline_names()) <= set(rows)
+        errs = [rows[n] for n in registry.baseline_names()
+                if failed(rows[n])]
+        assert errs, "expected at least one simulate-time failure row"
+        for row in errs:
+            assert row["error"]["type"] == "RuntimeError"
+            assert "boom" in row["error"]["message"]
+
+    def test_pre_evaluator_solver_signature_still_dispatches(self):
+        # third-party solvers registered against the old signature (no
+        # evaluator kwarg) must keep working through Scheduler.resolve
+        def legacy(platform, graphs, model, *, objective, max_transitions,
+                   iterations, depends_on, deadline_s):
+            from repro.core import solver_greedy
+            return solver_greedy.solve(
+                platform, graphs, model, objective=objective,
+                max_transitions=max_transitions, iterations=iterations,
+                depends_on=depends_on, evaluator="scalar")
+
+        registry.register_solver("legacy-sig", priority=99)(legacy)
+        try:
+            sched = small_scheduler()
+            plan = sched.resolve(small_request(sched, solver="legacy-sig"))
+            assert plan.solver == "legacy-sig"
+            assert plan.result.makespan > 0
+        finally:
+            registry._SOLVERS.pop("legacy-sig")
+
     def test_registered_baseline_feeds_compare_and_greedy(self):
         from repro.core.baselines import fastest_only
         registry.register_baseline("everything-fastest", fastest_only)
