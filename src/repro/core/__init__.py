@@ -15,12 +15,17 @@ from .accelerators import PLATFORMS, Accelerator, Platform
 from .contention import (PiecewiseModel, ProportionalShareModel,
                          estimate_blackbox_demand, pccs_from_pairs)
 from .graph import DNNGraph, LayerGroup
+from .lowering import (ProblemSpec, SlowdownSurface, concat_specs,
+                       lower_assignments, lower_product, lower_surface,
+                       lower_sweep, lower_workloads,
+                       register_surface_lowering,
+                       register_vectorized_slowdown, slowdown_array)
 from .plan import Plan, PlanCache, ScheduleRequest
 from .scheduler import (DEFAULT_POD_MODEL, DEFAULT_SOC_MODEL, Scheduler,
                         default_model, resolve_graphs, resolve_platform)
 from .simulate import Interval, SimResult, Workload, simulate
 from .simulate_batch import (BatchTimeline, simulate_assignments,
-                             simulate_batch, simulate_sweep)
+                             simulate_batch, simulate_spec, simulate_sweep)
 from .solver_bb import Solution
 
 __all__ = [
@@ -30,7 +35,11 @@ __all__ = [
     "DNNGraph", "LayerGroup",
     "Interval", "SimResult", "Workload", "simulate",
     "BatchTimeline", "simulate_assignments", "simulate_batch",
-    "simulate_sweep",
+    "simulate_spec", "simulate_sweep",
+    "ProblemSpec", "SlowdownSurface", "concat_specs", "lower_assignments",
+    "lower_product", "lower_surface", "lower_sweep", "lower_workloads",
+    "register_surface_lowering", "register_vectorized_slowdown",
+    "slowdown_array",
     "Solution",
     "Plan", "PlanCache", "ScheduleRequest", "Scheduler",
     "DEFAULT_POD_MODEL", "DEFAULT_SOC_MODEL",

@@ -29,11 +29,14 @@ except ImportError:  # pragma: no cover
 from .accelerators import Platform
 from .contention import ContentionModel
 from .graph import DNNGraph
+import dataclasses
+
+from .lowering import (lower_surface, register_surface_lowering,
+                       register_vectorized_slowdown, slowdown_array)
 from .plan import Plan, ScheduleRequest
 from .registry import (decode_model, encode_model,
                        register_contention_model)
 from .simulate import Workload, simulate
-from .simulate_batch import register_vectorized_slowdown, slowdown_array
 from .solver_bb import Solution
 from .solver_z3 import _EPS, _Encoding, _incumbent
 
@@ -213,10 +216,29 @@ register_contention_model(
     encode=lambda m: {"factor": m.factor, "base": encode_model(m.base)},
     decode=lambda cfg: ScaledContentionModel(
         decode_model(cfg["base"]), cfg["factor"]))
-register_vectorized_slowdown(
-    ScaledContentionModel,
-    lambda m, own, ext: 1.0 + m.factor * (slowdown_array(m.base, own, ext)
-                                          - 1.0))
+
+
+def _scaled_surface(m: ScaledContentionModel):
+    """Lower by folding the excess factor into the base surface — one
+    registration point serves the NumPy batch path and the jax evaluator
+    alike; scaled-of-scaled towers fold multiplicatively."""
+    base = lower_surface(m.base)
+    if base is None:
+        return None   # no array-IR form (jax evaluator refuses; NumPy
+        #               falls through to _scaled_vectorized below)
+    return dataclasses.replace(base, factor=base.factor * m.factor)
+
+
+def _scaled_vectorized(m: ScaledContentionModel, own, ext):
+    # reached only when the base has no surface form (model_slowdown
+    # dispatches surface-first): delegate to the base's vectorized path so
+    # §4.4 rescaling never drops a third-party fast path to the
+    # elementwise fallback.
+    return 1.0 + m.factor * (slowdown_array(m.base, own, ext) - 1.0)
+
+
+register_surface_lowering(ScaledContentionModel, _scaled_surface)
+register_vectorized_slowdown(ScaledContentionModel, _scaled_vectorized)
 
 
 def quantize_severity(factor: float) -> float:

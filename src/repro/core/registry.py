@@ -46,6 +46,18 @@ class SolverUnavailable(RuntimeError):
     """A solver entry exists but its backend is not importable here."""
 
 
+class UnknownEntryError(KeyError):
+    """Lookup of an unregistered entry name (solver/evaluator/baseline).
+
+    A ``KeyError`` whose ``str()`` is the human-readable message (plain
+    ``KeyError`` reprs its argument), so CLI surfaces can show it directly;
+    the message always lists the registered names.
+    """
+
+    def __str__(self) -> str:  # pragma: no cover - trivial
+        return self.args[0] if self.args else ""
+
+
 # ---------------------------------------------------------------------------
 # solvers
 # ---------------------------------------------------------------------------
@@ -97,7 +109,7 @@ def get_solver(name: str) -> SolverEntry:
     try:
         return _SOLVERS[name]
     except KeyError:
-        raise KeyError(
+        raise UnknownEntryError(
             f"unknown solver {name!r}; registered solvers: "
             f"{', '.join(solver_names())} (or {AUTO!r})") from None
 
@@ -216,7 +228,7 @@ def get_evaluator(name: str) -> EvaluatorEntry:
     try:
         return _EVALUATORS[name]
     except KeyError:
-        raise KeyError(
+        raise UnknownEntryError(
             f"unknown evaluator {name!r}; registered evaluators: "
             f"{', '.join(evaluator_names())} (or {EVAL_AUTO!r})") from None
 
@@ -257,6 +269,31 @@ def _scalar_simulate_assignments(platform, graphs, assignments_batch, model,
     return _scalar_simulate_batch(platform, batch, model, validate=validate)
 
 
+_JAX_OK: bool | None = None
+
+
+def _jax_available() -> bool:
+    """Probe (once) whether the jax evaluator backend can run here."""
+    global _JAX_OK
+    if _JAX_OK is None:
+        try:
+            from . import simulate_jax
+            _JAX_OK = simulate_jax.HAVE_JAX
+        except Exception:  # pragma: no cover - import storms on broken jax
+            _JAX_OK = False
+    return _JAX_OK
+
+
+def _jax_simulate_batch(*args, **kwargs):
+    from . import simulate_jax
+    return simulate_jax.simulate_batch(*args, **kwargs)
+
+
+def _jax_simulate_assignments(*args, **kwargs):
+    from . import simulate_jax
+    return simulate_jax.simulate_assignments(*args, **kwargs)
+
+
 register_evaluator(
     "batch", priority=0,
     simulate=simulate,                       # single candidates stay scalar
@@ -269,6 +306,17 @@ register_evaluator(
     simulate_batch=_scalar_simulate_batch,
     simulate_assignments=_scalar_simulate_assignments,
     description="authoritative event-driven simulator, looped per candidate")
+# priority > batch: "auto" keeps resolving to the NumPy path (no jit warmup
+# surprises in interactive use); searches opt into XLA with evaluator="jax".
+# Either way the scalar simulator stays authoritative for final incumbents.
+register_evaluator(
+    "jax", priority=50, available=_jax_available,
+    simulate=simulate,                       # final incumbents stay scalar
+    simulate_batch=_jax_simulate_batch,
+    simulate_assignments=_jax_simulate_assignments,
+    description="jax.jit+vmap lockstep evaluator over the lowered "
+                "ProblemSpec (core.simulate_jax; float64 via scoped "
+                "enable_x64)")
 
 
 # ---------------------------------------------------------------------------
@@ -407,6 +455,6 @@ def get_baseline(name: str) -> Callable:
     try:
         return _BASELINES[name]
     except KeyError:
-        raise KeyError(
+        raise UnknownEntryError(
             f"unknown baseline {name!r}; registered baselines: "
             f"{', '.join(baseline_names())}") from None

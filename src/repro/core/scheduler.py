@@ -90,12 +90,14 @@ class Scheduler:
         self.platform = resolve_platform(platform)
         self.model = model or default_model(self.platform)
         self.cache = cache if cache is not None else PlanCache()
-        #: how solvers/compare score candidate schedules: "batch" | "scalar"
-        #: | "auto" (best available).  Not part of the problem identity —
-        #: two evaluators cache under the same request hash; the Plan
-        #: records which one actually searched.
+        #: how solvers/compare score candidate schedules: "batch" | "jax" |
+        #: "scalar" | "auto" (best available).  Not part of the problem
+        #: identity — evaluators cache under the same request hash; the
+        #: Plan records which one actually searched.
         if evaluator != registry.EVAL_AUTO:
-            registry.get_evaluator(evaluator)      # raises with known names
+            # fail construction, not first solve, on a typo — the raised
+            # UnknownEntryError lists the registered evaluator names.
+            registry.get_evaluator(evaluator)
         self.evaluator = evaluator
         #: actual solver invocations (== cache misses that reached a solver).
         self.solves = 0

@@ -14,6 +14,14 @@ overhead is paid once per event *wave* instead of once per event per
 candidate, which is where the >=10x candidate-evaluation throughput comes
 from (see ``benchmarks/bench_simulate.py`` / ``BENCH_simulate.json``).
 
+Problems reach the event loop as a lowered :class:`~repro.core.lowering.
+ProblemSpec` — the frozen array-IR produced by :mod:`repro.core.lowering`
+(``lower_workloads`` / ``lower_assignments`` / ``lower_product`` /
+``lower_sweep``) and shared with the XLA evaluator in
+:mod:`repro.core.simulate_jax`; :func:`simulate_spec` here is the NumPy
+interpretation of that IR, and the convenience wrappers below lower and run
+in one call.
+
 Semantics are bit-for-bit the scalar simulator's modulo floating-point
 summation order (guarded to 1e-6 by ``tests/test_simulate_differential.py``):
 
@@ -33,102 +41,26 @@ recorded result never depends on this fast path.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Mapping, Sequence
+from typing import Mapping, Sequence
 
 import numpy as np
 
 from .accelerators import Platform
-from .contention import ContentionModel, PiecewiseModel, ProportionalShareModel
+from .contention import ContentionModel
 from .graph import DNNGraph
-from .simulate import SimResult, Workload, validate_assignment
+# re-exported for backward compatibility: the surface/vectorized-slowdown
+# registries live in core.lowering now (one home, every backend consumes).
+from .lowering import (ProblemSpec, TOL as _TOL, lower_assignments,
+                       lower_product, lower_sweep, lower_workloads,
+                       model_slowdown, register_vectorized_slowdown,
+                       slowdown_array)
+from .simulate import SimResult, Workload
 
-_TOL = 1e-9   # must match simulate._TOL: the differential contract depends
-              # on both simulators resolving events at the same threshold.
-
-
-# ---------------------------------------------------------------------------
-# vectorized slowdown surfaces
-# ---------------------------------------------------------------------------
-
-#: cls -> fn(model, own: ndarray, ext: ndarray) -> ndarray.  Third-party
-#: contention models register here to stay on the fast path; anything
-#: unregistered falls back to an elementwise call of ``model.slowdown``.
-_VECTORIZED: dict[type, Callable[[Any, np.ndarray, np.ndarray], np.ndarray]] = {}
-
-
-def register_vectorized_slowdown(
-        cls: type,
-        fn: Callable[[Any, np.ndarray, np.ndarray], np.ndarray],
-        replace: bool = False) -> None:
-    """Register a NumPy implementation of ``cls.slowdown`` for the batch path."""
-    if cls in _VECTORIZED and not replace:
-        raise ValueError(f"vectorized slowdown for {cls.__name__} already "
-                         f"registered")
-    _VECTORIZED[cls] = fn
-
-
-def _proportional_share(m: ProportionalShareModel, own: np.ndarray,
-                        ext: np.ndarray) -> np.ndarray:
-    own = np.maximum(0.0, own)
-    ext = np.maximum(0.0, ext)
-    total = own + ext
-    boundedness = np.minimum(1.0, own / m.capacity)
-    dilation = total / m.capacity
-    s = 1.0 + m.sensitivity * boundedness * (dilation - 1.0)
-    return np.where((own == 0.0) | (total <= m.capacity), 1.0, s)
-
-
-def _locate_batch(knots: np.ndarray, x: np.ndarray):
-    """Vectorized PiecewiseModel._locate: (lo, hi, w) per element."""
-    n = len(knots)
-    hi = np.searchsorted(knots, x, side="right")
-    lo = np.clip(hi - 1, 0, n - 1)
-    hi = np.clip(hi, 0, n - 1)
-    below = x <= knots[0]
-    above = x >= knots[-1]
-    lo = np.where(below, 0, np.where(above, n - 1, lo))
-    hi = np.where(below, 0, np.where(above, n - 1, hi))
-    denom = knots[hi] - knots[lo]
-    with np.errstate(invalid="ignore", divide="ignore"):
-        w = np.where(denom > 0, (x - knots[lo]) / np.where(denom > 0, denom, 1.0),
-                     0.0)
-    w = np.where(below | above, 0.0, w)
-    return lo, hi, w
-
-
-def _piecewise(m: PiecewiseModel, own: np.ndarray,
-               ext: np.ndarray) -> np.ndarray:
-    ok = np.asarray(m.own_knots, dtype=float)
-    ek = np.asarray(m.ext_knots, dtype=float)
-    table = np.asarray(m.table, dtype=float)
-    i0, i1, wi = _locate_batch(ok, own)
-    j0, j1, wj = _locate_batch(ek, ext)
-    v0 = table[i0, j0] * (1 - wj) + table[i0, j1] * wj
-    v1 = table[i1, j0] * (1 - wj) + table[i1, j1] * wj
-    s = v0 * (1 - wi) + v1 * wi
-    return np.where((own <= 0.0) | (ext <= 0.0), 1.0, s)
-
-
-register_vectorized_slowdown(ProportionalShareModel, _proportional_share)
-register_vectorized_slowdown(PiecewiseModel, _piecewise)
-
-
-def slowdown_array(model: Any, own: np.ndarray, ext: np.ndarray) -> np.ndarray:
-    """Vectorized ``model.slowdown`` over equal-shaped demand arrays.
-
-    Uses the registered NumPy surface when the model class has one and an
-    elementwise fallback otherwise — slower, but any object with a scalar
-    ``slowdown`` stays usable (and *correct*) from every batch call site.
-    """
-    fn = _VECTORIZED.get(type(model))
-    if fn is not None:
-        return fn(model, own, ext)
-    flat_own = np.asarray(own, dtype=float).ravel()
-    flat_ext = np.asarray(ext, dtype=float).ravel()
-    out = np.fromiter((model.slowdown(float(o), float(e))
-                       for o, e in zip(flat_own, flat_ext)),
-                      dtype=float, count=flat_own.size)
-    return out.reshape(np.shape(own))
+__all__ = [
+    "BatchTimeline", "batch_from_results", "simulate_spec", "simulate_batch",
+    "simulate_assignments", "simulate_product", "simulate_sweep",
+    "register_vectorized_slowdown", "slowdown_array",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -251,246 +183,7 @@ def batch_from_results(results: Sequence[SimResult],
 
 
 # ---------------------------------------------------------------------------
-# packing: Workload lists -> dense candidate arrays
-# ---------------------------------------------------------------------------
-
-class _Packed:
-    """Dense array form of a candidate population (all float64/int64)."""
-
-    __slots__ = ("n", "w", "gmax", "amax", "acc", "dur", "dem", "tau",
-                 "ngroups", "iters", "dep", "arrival", "acc_names",
-                 "domshare", "model_of_acc", "models")
-
-    def __init__(self, platform: Platform, n: int, w: int, gmax: int,
-                 model: ContentionModel | Mapping[str, ContentionModel]):
-        acc_names = list(platform.names)
-        acc_idx = {a: j for j, a in enumerate(acc_names)}
-        self.n, self.w, self.gmax = n, w, gmax
-        self.amax = len(acc_names)
-        self.acc_names = tuple(acc_names)
-        self.acc = np.zeros((n, w, gmax), dtype=np.int64)
-        self.dur = np.zeros((n, w, gmax))
-        self.dem = np.zeros((n, w, gmax))
-        self.tau = np.zeros((n, w, gmax))
-        self.ngroups = np.zeros((n, w), dtype=np.int64)
-        self.iters = np.ones((n, w), dtype=np.int64)
-        self.dep = np.full((n, w), -1, dtype=np.int64)
-        self.arrival = np.zeros((n, w))
-
-        # domain-share matrix: domshare[a, b] = number of contention domains
-        # containing both accelerators (diagonal zero) — external demand seen
-        # by a layer on `a` is sum_b demand_b * domshare[a, b], replicating
-        # the scalar simulator's per-domain accumulation.
-        ds = np.zeros((self.amax, self.amax))
-        for members in platform.domains.values():
-            idxs = [acc_idx[m] for m in members]
-            for i in idxs:
-                for j in idxs:
-                    if i != j:
-                        ds[i, j] += 1.0
-        self.domshare = ds
-
-        # per-accelerator contention model (the scalar simulator uses the
-        # model of the accelerator's *first* domain).
-        if hasattr(model, "slowdown"):
-            models: dict[str, Any] = {d: model for d in platform.domains}
-            if not models:
-                models = {"_": model}
-        else:
-            models = dict(model)  # type: ignore[arg-type]
-        first_domain: dict[str, str] = {}
-        for dom, members in platform.domains.items():
-            for m in members:
-                first_domain.setdefault(m, dom)
-        self.models = []
-        self.model_of_acc = np.full(self.amax, -1, dtype=np.int64)
-        seen: dict[int, int] = {}
-        for j, a in enumerate(acc_names):
-            dom = first_domain.get(a)
-            if dom is None:
-                continue  # never contends: slowdown is never evaluated
-            mod = models.get(dom)
-            if mod is None:
-                # scalar simulate would KeyError on first contention; defer
-                # identically by leaving the slot unmodeled.
-                continue
-            key = id(mod)
-            if key not in seen:
-                seen[key] = len(self.models)
-                self.models.append(mod)
-            self.model_of_acc[j] = seen[key]
-
-
-def _pack_workloads(platform: Platform,
-                    workloads_batch: Sequence[Sequence[Workload]],
-                    model: ContentionModel | Mapping[str, ContentionModel],
-                    validate: bool) -> _Packed:
-    """Generic packing: per-candidate Workload lists (graphs may differ)."""
-    acc_idx = {a: j for j, a in enumerate(platform.names)}
-    n = len(workloads_batch)
-    w = len(workloads_batch[0])
-    for c, wls in enumerate(workloads_batch):
-        if len(wls) != w:
-            raise ValueError(
-                f"candidate {c} has {len(wls)} workloads, expected {w} "
-                f"(all candidates of a batch share the workload count)")
-    gmax = max(len(wl.graph) for wls in workloads_batch for wl in wls)
-    p = _Packed(platform, n, w, gmax, model)
-    for c, wls in enumerate(workloads_batch):
-        for m, wl in enumerate(wls):
-            if validate:
-                validate_assignment(platform, wl)
-            g = wl.graph
-            ng = len(g)
-            p.ngroups[c, m] = ng
-            p.iters[c, m] = wl.iterations
-            p.dep[c, m] = -1 if wl.depends_on is None else wl.depends_on
-            p.arrival[c, m] = wl.arrival_ms
-            asg = wl.assignment
-            for i in range(ng):
-                a = asg[i]
-                p.acc[c, m, i] = acc_idx[a]
-                p.dur[c, m, i] = g[i].time_on(a)
-                p.dem[c, m, i] = g[i].demand_on(a)
-                if i + 1 < ng:
-                    p.tau[c, m, i] = platform.transition_cost_ms(
-                        g[i].out_bytes, a, asg[i + 1])
-    return p
-
-
-def _graph_arrays(platform: Platform, g: DNNGraph,
-                  arr: np.ndarray, validate: bool):
-    """Vectorized per-graph fill: assignment string array (K, len(g)) ->
-    (acc idx, duration, demand, post-group transition delay) arrays."""
-    names = list(platform.names)
-    a_cnt = len(names)
-    ng = len(g)
-    if arr.shape[1:] != (ng,):
-        raise ValueError(
-            f"graph {g.name!r}: assignment shape {arr.shape} != (*, {ng})")
-    time_t = np.full((ng, a_cnt), np.nan)
-    dem_t = np.zeros((ng, a_cnt))
-    legal = np.zeros(ng, dtype=bool)
-    out_b = np.zeros(ng)
-    for i, grp in enumerate(g):
-        legal[i] = grp.can_transition_after
-        out_b[i] = grp.out_bytes
-        for a, tv in grp.times.items():
-            if a in names:
-                time_t[i, names.index(a)] = float(tv)
-        for a, dv in grp.mem_demand.items():
-            if a in names:
-                dem_t[i, names.index(a)] = float(dv)
-    tau_pair = np.zeros((a_cnt, a_cnt))
-    for si, src in enumerate(names):
-        for di, dst in enumerate(names):
-            if si != di:
-                tau_pair[si, di] = (platform.acc(src).transition_out_ms
-                                    + platform.acc(dst).transition_in_ms)
-    move = (out_b / platform.transition_bw / 1e-3
-            if platform.transition_bw else np.zeros(ng))
-
-    sorted_names = sorted(names)
-    to_idx = np.argsort(np.array(names))            # sorted pos -> acc index
-    pos = np.clip(np.searchsorted(sorted_names, arr), 0, a_cnt - 1)
-    idx = to_idx[pos]
-    if validate and not (np.asarray(names)[idx] == arr).all():
-        bad = arr[np.asarray(names)[idx] != arr].ravel()[0]
-        raise ValueError(f"{g.name}: unknown accelerator {bad!r}")
-    gi = np.arange(ng)
-    dur = time_t[gi[None, :], idx]
-    if validate and np.isnan(dur).any():
-        ci, gix = np.nonzero(np.isnan(dur))
-        raise ValueError(
-            f"{g.name}[{gix[0]}] cannot run on {arr[ci[0], gix[0]]!r}")
-    dem = dem_t[gi[None, :], idx]
-    tau = np.zeros_like(dur)
-    if ng > 1:
-        moved = idx[:, :-1] != idx[:, 1:]
-        if validate and (moved & ~legal[None, :-1]).any():
-            ci, gix = np.nonzero(moved & ~legal[None, :-1])
-            raise ValueError(
-                f"{g.name}: illegal transition after group {gix[0]} "
-                f"({g[gix[0]].name})")
-        tau[:, :-1] = np.where(
-            moved, move[None, :-1] + tau_pair[idx[:, :-1], idx[:, 1:]], 0.0)
-    return idx, np.nan_to_num(dur), dem, tau
-
-
-def _set_static_columns(p: _Packed, iterations: Sequence[int],
-                        depends_on: Sequence[int | None]) -> None:
-    p.iters[:] = np.asarray(list(iterations), dtype=np.int64)[None, :]
-    p.dep[:] = np.asarray([-1 if d is None else d for d in depends_on],
-                          dtype=np.int64)[None, :]
-
-
-def _pack_assignments(platform: Platform, graphs: Sequence[DNNGraph],
-                      assignments_batch: Sequence[Sequence[Sequence[str]]],
-                      model: ContentionModel | Mapping[str, ContentionModel],
-                      iterations: Sequence[int],
-                      depends_on: Sequence[int | None],
-                      validate: bool) -> _Packed:
-    """Solver hot-path packing: fixed graphs, N assignment vectors.
-
-    Per-graph (group, accelerator) lookup tables are built once and every
-    candidate is filled by vectorized gathers — no per-candidate Python
-    loop, which is what keeps huge sweeps pack-bound on NumPy rather than
-    the interpreter.
-    """
-    n = len(assignments_batch)
-    w = len(graphs)
-    gmax = max(len(g) for g in graphs)
-    p = _Packed(platform, n, w, gmax, model)
-    _set_static_columns(p, iterations, depends_on)
-    for m, g in enumerate(graphs):
-        ng = len(g)
-        p.ngroups[:, m] = ng
-        arr = np.asarray([asgs[m] for asgs in assignments_batch])
-        idx, dur, dem, tau = _graph_arrays(platform, g, arr, validate)
-        p.acc[:, m, :ng] = idx
-        p.dur[:, m, :ng] = dur
-        p.dem[:, m, :ng] = dem
-        p.tau[:, m, :ng] = tau
-    return p
-
-
-def _pack_product(platform: Platform, graphs: Sequence[DNNGraph],
-                  cand_lists: Sequence[Sequence[Sequence[str]]],
-                  model: ContentionModel | Mapping[str, ContentionModel],
-                  iterations: Sequence[int],
-                  depends_on: Sequence[int | None],
-                  validate: bool) -> _Packed:
-    """Pack the full cross product of per-graph candidate lists without
-    materializing the combinations: each graph's unique assignments are
-    packed once, then broadcast into the product in ``itertools.product``
-    order by pure index arithmetic."""
-    w = len(graphs)
-    ks = [len(c) for c in cand_lists]
-    n = 1
-    for k in ks:
-        n *= k
-    gmax = max(len(g) for g in graphs)
-    p = _Packed(platform, n, w, gmax, model)
-    _set_static_columns(p, iterations, depends_on)
-    after = n
-    for m, g in enumerate(graphs):
-        ng = len(g)
-        p.ngroups[:, m] = ng
-        arr = np.asarray(list(cand_lists[m]))
-        idx, dur, dem, tau = _graph_arrays(platform, g, arr, validate)
-        # itertools.product order: graph m's index repeats `after` times
-        # within one period and the whole period tiles `before` times.
-        after //= ks[m]
-        sel = np.tile(np.repeat(np.arange(ks[m]), after), n // (ks[m] * after))
-        p.acc[:, m, :ng] = idx[sel]
-        p.dur[:, m, :ng] = dur[sel]
-        p.dem[:, m, :ng] = dem[sel]
-        p.tau[:, m, :ng] = tau[sel]
-    return p
-
-
-# ---------------------------------------------------------------------------
-# the lockstep event loop
+# the lockstep event loop (NumPy interpretation of the lowered IR)
 # ---------------------------------------------------------------------------
 
 def _empty_batch(platform: Platform) -> BatchTimeline:
@@ -520,7 +213,8 @@ def simulate_batch(
     """
     if len(workloads_batch) == 0:
         return _empty_batch(platform)
-    return _run(_pack_workloads(platform, workloads_batch, model, validate))
+    return simulate_spec(lower_workloads(platform, workloads_batch, model,
+                                         validate))
 
 
 def _col_reduce(ufunc, arr: np.ndarray) -> np.ndarray:
@@ -538,24 +232,36 @@ def _col_reduce(ufunc, arr: np.ndarray) -> np.ndarray:
     return out
 
 
-def _run(p: _Packed) -> BatchTimeline:
+def simulate_spec(spec: ProblemSpec) -> BatchTimeline:
+    """Run the lockstep NumPy event loop over a lowered problem spec.
+
+    The spec is immutable and reusable; candidate compaction during the run
+    operates on local gathers, never on the spec's arrays.
+    """
+    p = spec
     n, w, a_cnt = p.n, p.w, p.amax
     n0 = n
     rows = np.arange(n)
     #: live position -> original candidate id (identity until compaction).
     orig = np.arange(n)
 
+    # spec columns as locals: compaction re-gathers these (the spec's own
+    # arrays are read-only and shared).
+    g_acc, g_dur, g_dem, g_tau = p.acc, p.dur, p.dem, p.tau
+    g_ngroups, g_iters = p.ngroups, p.iters
+    g_dep, g_arrival = p.dep, p.arrival
+
     # mutable per-(candidate, workload) state — the scalar _WorkloadState
     # fields as arrays.  cur_acc/own are maintained incrementally (they only
     # change at group/iteration boundaries) to keep the per-wave kernel
     # count down.
     group = np.zeros((n, w), dtype=np.int64)
-    cur_acc = p.acc[:, :, 0].copy()
-    own = p.dem[:, :, 0].copy()
-    remaining = p.dur[:, :, 0].copy()
-    ready = p.arrival.copy()
+    cur_acc = g_acc[:, :, 0].copy()
+    own = g_dem[:, :, 0].copy()
+    remaining = g_dur[:, :, 0].copy()
+    ready = g_arrival.copy()
     it = np.zeros((n, w), dtype=np.int64)
-    it_start = p.arrival.copy()
+    it_start = g_arrival.copy()
     started = np.zeros((n, w), dtype=bool)
     done = np.zeros((n, w), dtype=bool)
     is_run = np.zeros((n, w), dtype=bool)
@@ -563,8 +269,8 @@ def _run(p: _Packed) -> BatchTimeline:
     t = np.zeros(n)
 
     # outputs stay full-size, indexed by original candidate id.
-    max_it = int(p.iters.max())
-    iters_full = p.iters.copy()
+    max_it = int(g_iters.max())
+    iters_full = g_iters.copy()
     finish = np.zeros((n0, w))
     lat = np.full((n0, w, max_it), np.nan)
     contention = np.zeros(n0)
@@ -573,7 +279,7 @@ def _run(p: _Packed) -> BatchTimeline:
     # same guard shape as the scalar simulator, summed across the batch
     # (each lockstep wave advances at least one event or idle jump in every
     # still-alive candidate).
-    per_cand = 200000 + 200 * (p.ngroups * p.iters).sum(axis=1)
+    per_cand = 200000 + 200 * (g_ngroups * g_iters).sum(axis=1)
     max_waves = int(per_cand.sum())
     guard = 0
 
@@ -599,17 +305,17 @@ def _run(p: _Packed) -> BatchTimeline:
             started, done, is_run = started[keep], done[keep], is_run[keep]
             run_wl = run_wl[keep]
             alive = alive[keep]
-            p.acc, p.dur = p.acc[keep], p.dur[keep]
-            p.dem, p.tau = p.dem[keep], p.tau[keep]
-            p.ngroups, p.iters = p.ngroups[keep], p.iters[keep]
-            p.dep, p.arrival = p.dep[keep], p.arrival[keep]
+            g_acc, g_dur = g_acc[keep], g_dur[keep]
+            g_dem, g_tau = g_dem[keep], g_tau[keep]
+            g_ngroups, g_iters = g_ngroups[keep], g_iters[keep]
+            g_dep, g_arrival = g_dep[keep], g_arrival[keep]
             n = len(keep)
             rows = np.arange(n)
 
         # 1) FIFO claim: eligible waiting workloads sorted by (ready, idx)
         # take their accelerator if free.
-        dep_row = np.clip(p.dep, 0, w - 1)
-        dep_ok = ((p.dep < 0)
+        dep_row = np.clip(g_dep, 0, w - 1)
+        dep_ok = ((g_dep < 0)
                   | done[rows[:, None], dep_row]
                   | (it[rows[:, None], dep_row] > it))
         eligible = (alive[:, None] & ~done & ~is_run & dep_ok
@@ -676,8 +382,11 @@ def _run(p: _Packed) -> BatchTimeline:
             for mid, mod in enumerate(p.models):
                 m2 = macc == mid
                 if m2.any():
+                    # surfaces come pre-lowered on the spec: no per-wave
+                    # re-lowering on the hot path.
                     s_run[m2] = np.maximum(
-                        1.0, slowdown_array(mod, own_run[m2], ext_run[m2]))
+                        1.0, model_slowdown(mod, p.surfaces[mid],
+                                            own_run[m2], ext_run[m2]))
             if (contended & (macc < 0)).any():
                 bad = int(run_acc[np.nonzero(contended & (macc < 0))[0][0]])
                 raise KeyError(
@@ -714,15 +423,15 @@ def _run(p: _Packed) -> BatchTimeline:
             is_run[cc, cw] = False
 
             g_cur = group[cc, cw]
-            has_next = g_cur + 1 < p.ngroups[cc, cw]
+            has_next = g_cur + 1 < g_ngroups[cc, cw]
             if has_next.any():
                 hc, hw = cc[has_next], cw[has_next]
-                tau = p.tau[hc, hw, g_cur[has_next]]
+                tau = g_tau[hc, hw, g_cur[has_next]]
                 g_new = g_cur[has_next] + 1
                 group[hc, hw] = g_new
-                cur_acc[hc, hw] = p.acc[hc, hw, g_new]
-                own[hc, hw] = p.dem[hc, hw, g_new]
-                remaining[hc, hw] = p.dur[hc, hw, g_new]
+                cur_acc[hc, hw] = g_acc[hc, hw, g_new]
+                own[hc, hw] = g_dem[hc, hw, g_new]
+                remaining[hc, hw] = g_dur[hc, hw, g_new]
                 ready[hc, hw] = t[hc] + tau
 
             if not has_next.all():
@@ -731,7 +440,7 @@ def _run(p: _Packed) -> BatchTimeline:
                 lat[orig[lc], lw, it_new - 1] = t[lc] - it_start[lc, lw]
                 it[lc, lw] = it_new
                 started[lc, lw] = False
-                fin = it_new >= p.iters[lc, lw]
+                fin = it_new >= g_iters[lc, lw]
                 if fin.any():
                     fc, fw = lc[fin], lw[fin]
                     done[fc, fw] = True
@@ -739,9 +448,9 @@ def _run(p: _Packed) -> BatchTimeline:
                 if not fin.all():
                     ac, aw = lc[~fin], lw[~fin]
                     group[ac, aw] = 0
-                    cur_acc[ac, aw] = p.acc[ac, aw, 0]
-                    own[ac, aw] = p.dem[ac, aw, 0]
-                    remaining[ac, aw] = p.dur[ac, aw, 0]
+                    cur_acc[ac, aw] = g_acc[ac, aw, 0]
+                    own[ac, aw] = g_dem[ac, aw, 0]
+                    remaining[ac, aw] = g_dur[ac, aw, 0]
                     ready[ac, aw] = t[ac]
             alive = ~_col_reduce(np.logical_and, done)
             n_alive = int(alive.sum())
@@ -771,42 +480,9 @@ def simulate_assignments(
     construction entirely: packing is a handful of vectorized gathers."""
     if len(assignments_batch) == 0:
         return _empty_batch(platform)
-    its = list(iterations or [1] * len(graphs))
-    deps = list(depends_on or [None] * len(graphs))
-    return _run(_pack_assignments(platform, graphs, assignments_batch,
-                                  model, its, deps, validate))
-
-
-def _concat_packed(packs: Sequence[_Packed]) -> _Packed:
-    """Concatenate per-problem packs along the candidate axis (shared
-    platform/model; same workload count; group axis padded to the max)."""
-    first = packs[0]
-    w = first.w
-    gmax = max(pk.gmax for pk in packs)
-    n = sum(pk.n for pk in packs)
-    out = _Packed.__new__(_Packed)
-    out.n, out.w, out.gmax = n, w, gmax
-    out.amax = first.amax
-    out.acc_names = first.acc_names
-    out.domshare = first.domshare
-    out.models = first.models
-    out.model_of_acc = first.model_of_acc
-
-    def cat(name: str, pad_axis2: bool):
-        parts = []
-        for pk in packs:
-            a = getattr(pk, name)
-            if pad_axis2 and pk.gmax < gmax:
-                pad = np.zeros((pk.n, w, gmax - pk.gmax), dtype=a.dtype)
-                a = np.concatenate([a, pad], axis=2)
-            parts.append(a)
-        setattr(out, name, np.concatenate(parts, axis=0))
-
-    for name in ("acc", "dur", "dem", "tau"):
-        cat(name, True)
-    for name in ("ngroups", "iters", "dep", "arrival"):
-        cat(name, False)
-    return out
+    return simulate_spec(lower_assignments(
+        platform, graphs, assignments_batch, model, iterations=iterations,
+        depends_on=depends_on, validate=validate))
 
 
 def simulate_product(
@@ -827,10 +503,9 @@ def simulate_product(
     """
     if any(len(c) == 0 for c in cand_lists):
         return _empty_batch(platform)
-    its = list(iterations or [1] * len(graphs))
-    deps = list(depends_on or [None] * len(graphs))
-    return _run(_pack_product(platform, graphs, cand_lists, model,
-                              its, deps, validate))
+    return simulate_spec(lower_product(
+        platform, graphs, cand_lists, model, iterations=iterations,
+        depends_on=depends_on, validate=validate))
 
 
 def simulate_sweep(
@@ -852,18 +527,7 @@ def simulate_sweep(
     Returns the combined :class:`BatchTimeline` plus one ``slice`` per
     problem addressing its candidates inside the combined arrays.
     """
-    packs, slices, lo = [], [], 0
-    for graphs, cand_lists, iterations, depends_on in problems:
-        its = list(iterations or [1] * len(graphs))
-        deps = list(depends_on or [None] * len(graphs))
-        pk = _pack_product(platform, graphs, cand_lists, model,
-                           its, deps, validate)
-        packs.append(pk)
-        slices.append(slice(lo, lo + pk.n))
-        lo += pk.n
-    if not packs:
+    spec, slices = lower_sweep(platform, problems, model, validate)
+    if spec is None:
         return _empty_batch(platform), []
-    if len({pk.w for pk in packs}) != 1:
-        raise ValueError("all problems in a sweep must share the workload "
-                         "count")
-    return _run(_concat_packed(packs)), slices
+    return simulate_spec(spec), slices

@@ -8,20 +8,23 @@ schedules in Table 6 all use exactly one transition per DNN, and
 combinations with an admissible contention-free lower bound, and evaluates
 survivors with the exact simulator.
 
-Two evaluation backends (the registry ``evaluator`` knob):
+Evaluation backends (the registry ``evaluator`` knob):
 
 * ``"batch"`` (default via ``"auto"``) — lower bounds for the whole joint
   space are computed vectorized, candidates are visited in ascending-bound
   order in chunks, and each chunk is scored in one
-  :func:`repro.core.simulate_batch.simulate_assignments` call.  The final
-  incumbent is re-simulated through the authoritative scalar simulator, so
-  the returned :class:`Solution` never depends on the fast path.
+  ``simulate_assignments`` call of the selected evaluator entry (NumPy
+  lockstep for ``"batch"``, the XLA jit+vmap loop for ``"jax"`` — chunk
+  populations pad to powers of two there, so the tail chunks reuse
+  compiled executables).  The final incumbent is re-simulated through the
+  authoritative scalar simulator, so the returned :class:`Solution` never
+  depends on a fast path.
 * ``"scalar"`` — the original one-candidate-at-a-time loop.
 
-Both backends visit candidates in the same order and accept the same strict
-improvements, so they return the same schedule (the batch path may score a
-few extra candidates past the scalar path's break point; it can only confirm
-the incumbent).
+All backends visit candidates in the same order and accept the same strict
+improvements, so they return the same schedule (a population path may score
+a few extra candidates past the scalar path's break point; it can only
+confirm the incumbent).
 """
 from __future__ import annotations
 

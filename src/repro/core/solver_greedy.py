@@ -10,14 +10,17 @@ returns a valid, contention-scored schedule in polynomial time:
   2. improve it with single-group reassignment moves scored by the
      simulator until no move helps (or the sweep budget is hit).
 
-Two search backends (the registry ``evaluator`` knob):
+Search backends (the registry ``evaluator`` knob):
 
-* ``"batch"`` (default via ``"auto"``) — population hill climb: every legal
-  single-group move of every beam member is scored in one
-  :func:`repro.core.simulate_batch.simulate_assignments` call per step
-  (steepest ascent; ``beam_width > 1`` keeps the best k incumbents alive).
-  The final incumbent is re-simulated through the authoritative scalar
-  simulator before being returned.
+* ``"batch"`` (default via ``"auto"``) / ``"jax"`` — population hill
+  climb: every legal single-group move of every beam member is scored in
+  one ``simulate_assignments`` call of the selected evaluator entry per
+  step (steepest ascent; ``beam_width > 1`` keeps the best k incumbents
+  alive).  The NumPy entry packs each frontier directly; the jax entry
+  lowers it to a :class:`~repro.core.lowering.ProblemSpec` and pads to a
+  power of two, so the varying frontier sizes share compiled XLA
+  executables.  The final incumbent is re-simulated through the
+  authoritative scalar simulator before being returned.
 * ``"scalar"`` — the original first-improvement sweep, one scalar
   simulation per move.
 

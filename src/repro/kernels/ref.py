@@ -10,6 +10,48 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def piecewise_slowdown(own, ext, own_knots, ext_knots, table):
+    """Reference batched piecewise-linear PCCS slowdown surface.
+
+    Bilinear interpolation of ``table`` over the (own, ext) grid with
+    clamped extension outside, expressed gather-free as a tensor product of
+    1-D hat bases: ``s = Σ_i Σ_j hat_i(own) hat_j(ext) table[i, j]`` — the
+    same contraction the Pallas kernel in :mod:`repro.kernels.slowdown`
+    runs blocked on the MXU.  Zero own/external demand is the identity
+    (slowdown 1), mirroring ``repro.core.contention.PiecewiseModel``.
+    """
+    own = jnp.asarray(own)
+    ext = jnp.asarray(ext)
+    shape = own.shape
+    ho = _hat_weights(jnp.asarray(own_knots, own.dtype), own.reshape(-1))
+    he = _hat_weights(jnp.asarray(ext_knots, ext.dtype), ext.reshape(-1))
+    tab = jnp.asarray(table, own.dtype)
+    s = jnp.einsum("bk,km,bm->b", ho, tab, he).reshape(shape)
+    return jnp.where((own <= 0.0) | (ext <= 0.0), jnp.ones((), own.dtype), s)
+
+
+def _hat_weights(knots, x):
+    """(B, K) linear-interpolation hat weights of x against sorted knots.
+
+    Row b holds the barycentric weights of ``x[b]``: for x inside
+    ``[knots[i], knots[i+1]]`` exactly hats i and i+1 are non-zero and sum
+    to 1; outside the grid the nearest end knot gets weight 1 (clamping).
+    """
+    k = knots[None, :]
+    kprev = jnp.concatenate([knots[:1], knots[:-1]])[None, :]
+    knext = jnp.concatenate([knots[1:], knots[-1:]])[None, :]
+    xb = x[:, None]
+    tiny = jnp.asarray(1e-30, x.dtype)
+    up = (xb - kprev) / jnp.maximum(k - kprev, tiny)     # rising edge
+    dn = (knext - xb) / jnp.maximum(knext - k, tiny)     # falling edge
+    h = jnp.clip(jnp.minimum(up, dn), 0.0, 1.0)
+    n = knots.shape[0]
+    col = jnp.arange(n)[None, :]
+    h = jnp.where((col == 0) & (xb <= knots[0]), 1.0, h)
+    h = jnp.where((col == n - 1) & (xb >= knots[-1]), 1.0, h)
+    return h
+
+
 def _gqa_expand(k, n_heads):
     """(B,S,Hkv,D) -> (B,S,Hq,D) by repeating kv heads."""
     b, s, hkv, d = k.shape

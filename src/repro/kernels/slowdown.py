@@ -1,0 +1,119 @@
+"""Batched piecewise-linear PCCS slowdown surface as a Pallas kernel.
+
+The innermost op of the XLA schedule evaluator
+(:mod:`repro.core.simulate_jax`) is the contention model: one slowdown
+lookup per candidate × workload × contention interval.  For PCCS proper
+(:class:`~repro.core.contention.PiecewiseModel`) that lookup is bilinear
+interpolation of a calibration table over (own, external) demand — a
+gather, which TPUs hate.  This kernel reformulates it gather-free as a
+tensor-product of 1-D *hat* bases:
+
+    s(own, ext) = Σ_i Σ_j hat_i(own) · hat_j(ext) · table[i, j]
+                = hatO @ table @ hatE^T        (row-wise)
+
+so each block of demands becomes two tiny dense contractions on the MXU —
+no dynamic indexing, no scatter.  Grid = flat demand blocks; the knots and
+table ride along whole (they are a handful of floats).
+
+Backends follow the repo-wide dispatch idiom (:mod:`repro.kernels.ops`):
+
+  * ``pallas``           — Mosaic lowering on TPU;
+  * ``pallas_interpret`` — same kernel body, interpreted (tests on CPU);
+  * ``xla``              — the identical contraction in pure jnp
+                           (:func:`repro.kernels.ref.piecewise_slowdown`),
+                           used on CPU and inside vmapped/tiny call sites
+                           where a kernel launch cannot pay for itself;
+  * ``auto``             — pallas on TPU for big flat batches, xla
+                           otherwise.
+
+The NumPy evaluator stack never reaches this module: its fallback is
+``repro.core.lowering.slowdown_array`` (surface dispatch + elementwise
+last resort), which the differential suite pins to the scalar models.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import _hat_weights, piecewise_slowdown as _ref_piecewise
+
+#: below this many demand points a pallas launch cannot pay for itself —
+#: ``backend="auto"`` stays on the fused-XLA contraction instead.
+_MIN_PALLAS_ELEMS = 4096
+
+
+def _kernel(own_ref, ext_ref, ok_ref, ek_ref, tab_ref, out_ref):
+    own = own_ref[...]                      # (1, B)
+    ext = ext_ref[...]
+    ok = ok_ref[...][0]                     # (K,)
+    ek = ek_ref[...][0]                     # (M,)
+    tab = tab_ref[...]                      # (K, M)
+    ho = _hat_weights(ok, own[0])           # (B, K)
+    he = _hat_weights(ek, ext[0])           # (B, M)
+    s = jnp.sum((ho @ tab) * he, axis=-1)   # (B,)
+    one = jnp.ones((), s.dtype)
+    s = jnp.where((own[0] <= 0.0) | (ext[0] <= 0.0), one, s)
+    out_ref[...] = s[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _pallas_piecewise(own, ext, own_knots, ext_knots, table, *,
+                      block: int, interpret: bool):
+    n = own.shape[0]
+    nb = pl.cdiv(n, block)
+    pad = nb * block - n
+    if pad:
+        own = jnp.pad(own, (0, pad))
+        ext = jnp.pad(ext, (0, pad))
+    own2 = own.reshape(nb, block)
+    ext2 = ext.reshape(nb, block)
+    ok2 = own_knots.reshape(1, -1)
+    ek2 = ext_knots.reshape(1, -1)
+    flat = pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec(ok2.shape, lambda i: (0, 0)),
+            pl.BlockSpec(ek2.shape, lambda i: (0, 0)),
+            pl.BlockSpec(table.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), own.dtype),
+        interpret=interpret,
+    )(own2, ext2, ok2, ek2, table)
+    return flat.reshape(nb * block)[:n]
+
+
+def piecewise_slowdown(own, ext, own_knots, ext_knots, table, *,
+                       backend: str = "auto", block: int = 1024):
+    """Batched PCCS slowdown over equal-shaped demand arrays.
+
+    ``own``/``ext`` are demand fractions of any shape; ``own_knots`` (K,),
+    ``ext_knots`` (M,) and ``table`` (K, M) are the calibration surface.
+    Returns the elementwise slowdown (1.0 wherever either demand is zero),
+    matching ``PiecewiseModel.slowdown`` within float tolerance.
+    """
+    own = jnp.asarray(own)
+    ext = jnp.asarray(ext)
+    ok = jnp.asarray(own_knots, own.dtype)
+    ek = jnp.asarray(ext_knots, own.dtype)
+    tab = jnp.asarray(table, own.dtype)
+    b = backend
+    if b == "auto":
+        big = own.size >= _MIN_PALLAS_ELEMS
+        b = "pallas" if (jax.default_backend() == "tpu" and big) else "xla"
+    if b in ("xla", "ref"):
+        return _ref_piecewise(own, ext, ok, ek, tab)
+    if b in ("pallas", "pallas_interpret"):
+        shape = own.shape
+        out = _pallas_piecewise(
+            own.reshape(-1), ext.reshape(-1), ok, ek, tab,
+            block=min(block, max(128, own.size)),
+            interpret=(b == "pallas_interpret"))
+        return out.reshape(shape)
+    raise ValueError(f"unknown backend {b!r}")

@@ -109,12 +109,27 @@ def main(argv=None):
                     help="serialize the solved gateway Plan to PATH")
     ap.add_argument("--plan-only", action="store_true",
                     help="plan (and optionally save) without serving")
-    ap.add_argument("--evaluator", default="auto",
-                    choices=("auto", "batch", "scalar"),
+    ap.add_argument("--evaluator", default="auto", metavar="NAME",
                     help="candidate-schedule evaluator for any fresh solve: "
-                         "vectorized batch path or the authoritative scalar "
-                         "simulator (auto = batch when available)")
+                         "a registered evaluator name (batch = vectorized "
+                         "NumPy, jax = XLA jit+vmap over the lowered IR, "
+                         "scalar = the authoritative simulator looped; "
+                         "auto = best available, currently batch). Unknown "
+                         "names fail listing the registered evaluators.")
     args = ap.parse_args(argv)
+
+    if args.evaluator != "auto":
+        from repro.core import registry
+        try:
+            entry = registry.get_evaluator(args.evaluator)
+        except KeyError as exc:       # UnknownEntryError: lists known names
+            ap.error(str(exc))
+        if not entry.available():
+            avail = [e for e in registry.evaluator_names()
+                     if registry.get_evaluator(e).available()]
+            ap.error(f"evaluator {args.evaluator!r} is registered but its "
+                     f"backend is not available here (available: "
+                     f"{', '.join(avail) or 'none'})")
 
     if args.plan or args.save_plan or args.plan_only:
         if not args.gateway:

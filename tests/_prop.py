@@ -20,14 +20,22 @@ This module also hosts the shared *model* strategies for the contention
 metamorphic suite (:func:`proportional_models`, :func:`piecewise_models`,
 :func:`contention_models`) — piecewise surfaces are generated with
 monotone-non-decreasing tables, matching any physically meaningful PCCS
-calibration.
+calibration — plus the seeded random-scenario generators shared by the
+differential suites (:func:`random_platform` / :func:`random_workloads` /
+:func:`random_scenario`) and a strategy emitting lowered
+:class:`~repro.core.lowering.ProblemSpec` instances directly
+(:func:`problem_specs`).
 """
 from __future__ import annotations
 
 import itertools
 import os
+import random as _random
 
+from repro.core.accelerators import Accelerator, Platform
 from repro.core.contention import PiecewiseModel, ProportionalShareModel
+from repro.core.graph import DNNGraph, LayerGroup
+from repro.core.simulate import Workload
 
 _PROFILE = os.environ.get("HYPOTHESIS_PROFILE", "default")
 #: per-profile multiplier applied by :func:`examples` — explicit
@@ -231,3 +239,112 @@ else:
     def contention_models():
         return _Strategy(proportional_models().samples
                          + piecewise_models().samples)
+
+
+# ---------------------------------------------------------------------------
+# shared seeded scenario generators (differential suites, spec strategy)
+# ---------------------------------------------------------------------------
+
+def random_platform(rng: _random.Random) -> Platform:
+    n_acc = rng.choice([2, 2, 3])
+    names = [f"ACC{i}" for i in range(n_acc)]
+    accs = tuple(
+        Accelerator(a, peak_flops=1e12, mem_bw=1e11,
+                    transition_in_ms=rng.choice([0.0, rng.uniform(0, 0.05)]),
+                    transition_out_ms=rng.choice([0.0, rng.uniform(0, 0.05)]))
+        for a in names)
+    domains = {"EMC": tuple(names)}
+    if n_acc == 3 and rng.random() < 0.5:
+        # overlapping domains: ACC1 contends through both
+        domains = {"EMC": tuple(names[:2]), "AUX": tuple(names[1:])}
+    return Platform(
+        name="rand", accelerators=accs,
+        transition_bw=rng.uniform(5e10, 2e11),
+        domains=domains,
+        domain_bw={d: 1e11 for d in domains})
+
+
+def random_model(rng: _random.Random, platform: Platform):
+    def one():
+        if rng.random() < 0.5:
+            return ProportionalShareModel(
+                capacity=rng.uniform(0.8, 1.2),
+                sensitivity=rng.uniform(0.5, 3.0))
+        knots = tuple(sorted(rng.uniform(0.05, 1.3) for _ in range(3)))
+        if len(set(knots)) < 3:
+            return ProportionalShareModel()
+        row = [1.0 + rng.uniform(0, 0.3)]
+        for _ in range(2):
+            row.append(row[-1] + rng.uniform(0, 0.4))
+        table = [tuple(row)]
+        for _ in range(2):
+            table.append(tuple(v + rng.uniform(0, 0.4) for v in table[-1]))
+        return PiecewiseModel(knots, knots, tuple(table))
+
+    if rng.random() < 0.25:           # per-domain mapping form
+        return {d: one() for d in platform.domains}
+    return one()
+
+
+def random_workloads(rng: _random.Random, platform: Platform
+                     ) -> list[Workload]:
+    names = list(platform.names)
+    n_wl = rng.randint(1, 3)
+    wls = []
+    for w in range(n_wl):
+        n_groups = rng.randint(1, 4)
+        groups, assignment = [], []
+        for i in range(n_groups):
+            groups.append(LayerGroup(
+                name=f"g{i}",
+                times={a: rng.uniform(0.1, 5.0) for a in names},
+                mem_demand={a: (rng.uniform(0.0, 1.2)
+                                if rng.random() < 0.8 else 0.0)
+                            for a in names},
+                out_bytes=rng.uniform(0.0, 2e8),
+                can_transition_after=rng.random() < 0.8))
+            if i == 0:
+                assignment.append(rng.choice(names))
+            elif groups[i - 1].can_transition_after:
+                assignment.append(rng.choice(names))
+            else:
+                assignment.append(assignment[-1])
+        dep = None
+        if w > 0 and rng.random() < 0.4:
+            dep = rng.randrange(w)
+        wls.append(Workload(
+            DNNGraph(f"net{w}", tuple(groups)), tuple(assignment),
+            iterations=rng.randint(1, 3), depends_on=dep,
+            arrival_ms=rng.choice([0.0, rng.uniform(0.0, 3.0)])))
+    return wls
+
+
+def random_scenario(seed: int):
+    rng = _random.Random(seed)
+    platform = random_platform(rng)
+    return platform, random_workloads(rng, platform), random_model(
+        rng, platform)
+
+
+def spec_from_seed(seed: int):
+    """One seeded scenario, lowered straight to a ProblemSpec (a small
+    multi-candidate population over a shared platform/model)."""
+    from repro.core.lowering import lower_workloads
+
+    rng = _random.Random(seed)
+    platform = random_platform(rng)
+    model = random_model(rng, platform)
+    n_cand = rng.randint(1, 4)
+    batch = [random_workloads(rng, platform) for _ in range(n_cand)]
+    w = min(len(b) for b in batch)
+    return lower_workloads(platform, [b[:w] for b in batch], model)
+
+
+if HAVE_HYPOTHESIS:
+    def problem_specs():
+        """Strategy emitting lowered ProblemSpec instances directly."""
+        return st.builds(spec_from_seed,
+                         st.integers(min_value=0, max_value=10_000_000))
+else:
+    def problem_specs():
+        return _Strategy([spec_from_seed(s) for s in (0, 1, 2, 3, 5, 8)])

@@ -157,3 +157,61 @@ class TestRWKV6:
                                    np.asarray(y2), atol=1e-5, rtol=1e-5)
         np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
                                    atol=1e-5, rtol=1e-5)
+
+
+class TestSlowdownSurfaceKernel:
+    """The batched PCCS slowdown kernel vs the scalar contention model and
+    the NumPy surface path (repro.core.lowering.slowdown_array)."""
+
+    def _model(self):
+        from repro.core.contention import PiecewiseModel
+        return PiecewiseModel(
+            (0.2, 0.6, 1.0), (0.2, 0.5, 0.8, 1.1),
+            ((1.0, 1.1, 1.3, 1.5), (1.1, 1.4, 1.7, 1.9),
+             (1.3, 1.7, 2.2, 2.5)))
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+    def test_vs_numpy_surface_and_scalar_model(self, backend):
+        from repro.core.lowering import slowdown_array
+        from repro.kernels.slowdown import piecewise_slowdown
+        m = self._model()
+        rng = np.random.default_rng(0)
+        own = rng.uniform(-0.1, 1.4, size=2048)
+        ext = rng.uniform(-0.1, 1.4, size=2048)
+        want = slowdown_array(m, own, ext)
+        got = np.asarray(piecewise_slowdown(
+            own.astype(np.float32), ext.astype(np.float32),
+            m.own_knots, m.ext_knots, m.table, backend=backend))
+        np.testing.assert_allclose(got, want, atol=5e-6, rtol=5e-6)
+        # spot-check the scalar model directly, incl. exact knots/corners
+        for o, e in [(0.2, 0.5), (0.6, 1.1), (0.0, 0.9), (0.9, 0.0),
+                     (2.0, 2.0), (0.05, 0.05), (1.0, 1.1)]:
+            g = float(np.asarray(piecewise_slowdown(
+                jnp.float32(o)[None], jnp.float32(e)[None],
+                m.own_knots, m.ext_knots, m.table, backend=backend))[0])
+            assert g == pytest.approx(m.slowdown(o, e), abs=5e-6)
+
+    def test_zero_demand_is_identity(self):
+        from repro.kernels.slowdown import piecewise_slowdown
+        m = self._model()
+        own = jnp.asarray([0.0, 0.5, -1.0])
+        ext = jnp.asarray([0.7, 0.0, 0.7])
+        out = np.asarray(piecewise_slowdown(own, ext, m.own_knots,
+                                            m.ext_knots, m.table,
+                                            backend="xla"))
+        np.testing.assert_allclose(out, [1.0, 1.0, 1.0])
+
+    def test_nonmultiple_block_padding(self):
+        from repro.kernels.slowdown import piecewise_slowdown
+        m = self._model()
+        rng = np.random.default_rng(1)
+        own = rng.uniform(0.05, 1.3, size=777).astype(np.float32)
+        ext = rng.uniform(0.05, 1.3, size=777).astype(np.float32)
+        a = np.asarray(piecewise_slowdown(own, ext, m.own_knots,
+                                          m.ext_knots, m.table,
+                                          backend="pallas_interpret",
+                                          block=256))
+        b = np.asarray(piecewise_slowdown(own, ext, m.own_knots,
+                                          m.ext_knots, m.table,
+                                          backend="xla"))
+        np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-6)

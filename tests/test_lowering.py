@@ -1,0 +1,270 @@
+"""ProblemSpec lowering: identity, immutability, round-trip, surfaces.
+
+The lowered array-IR (:mod:`repro.core.lowering`) is the contract between
+problem construction and every fast evaluator backend; these tests pin:
+
+* value-based identity — equal problems lowered independently hash and
+  compare equal (specs key caches, e.g. compiled XLA executables);
+* immutability — spec arrays are read-only;
+* round-trip — ``lower -> simulate_spec`` equals simulating the original
+  Workload objects directly, on 20 seeded scenarios and on specs emitted
+  straight from the hypothesis strategy in ``tests/_prop.py``;
+* surface lowering — built-in contention models lower to
+  :class:`~repro.core.lowering.SlowdownSurface` parameters that reproduce
+  their scalar ``slowdown``, scaled towers fold multiplicatively, and
+  unknown models lower to None (NumPy fallback keeps working);
+* evaluator lookup errors list the registered names
+  (``Scheduler(evaluator=...)`` and the registry itself).
+"""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+import pytest
+
+from _prop import (contention_models, examples, given, problem_specs,
+                   random_scenario, settings, spec_from_seed, st)
+
+from repro.core import registry
+from repro.core.contention import PiecewiseModel, ProportionalShareModel
+from repro.core.lowering import (ProblemSpec, SlowdownSurface, concat_specs,
+                                 lower_surface, lower_workloads,
+                                 surface_slowdown)
+from repro.core.scheduler import Scheduler
+from repro.core.simulate import simulate
+from repro.core.simulate_batch import simulate_batch, simulate_spec
+
+
+def _spec_for(seed: int) -> ProblemSpec:
+    platform, wls, model = random_scenario(seed)
+    return lower_workloads(platform, [wls], model)
+
+
+class TestProblemSpecIdentity:
+    def test_independent_lowerings_compare_and_hash_equal(self):
+        for seed in range(8):
+            a, b = _spec_for(seed), _spec_for(seed)
+            assert a is not b
+            assert a == b
+            assert hash(a) == hash(b)
+            assert a.content_hash() == b.content_hash()
+
+    def test_hash_is_stable_within_process(self):
+        spec = _spec_for(3)
+        h = hash(spec)
+        for _ in range(3):
+            assert hash(spec) == h
+            assert hash(_spec_for(3)) == h
+
+    def test_distinct_problems_hash_differently(self):
+        seen = {_spec_for(seed).content_hash() for seed in range(12)}
+        assert len(seen) == 12
+
+    def test_spec_usable_as_dict_key(self):
+        cache = {_spec_for(5): "a"}
+        assert cache[_spec_for(5)] == "a"
+        assert _spec_for(6) not in cache
+
+    def test_arrays_are_read_only(self):
+        spec = _spec_for(1)
+        for name in ("acc", "dur", "dem", "tau", "ngroups", "iters",
+                     "dep", "arrival", "domshare", "model_of_acc"):
+            arr = getattr(spec, name)
+            with pytest.raises(ValueError):
+                arr.reshape(-1)[:1] = 0
+
+    def test_caller_owned_arrays_are_copied_not_frozen_in_place(self):
+        """Constructing a spec from user buffers must neither freeze the
+        caller's arrays nor alias them (mutations would corrupt the
+        cached hash)."""
+        import dataclasses
+        base = _spec_for(4)
+        mine = np.array(base.dur)        # writable caller-owned buffer
+        spec = dataclasses.replace(base, dur=mine)
+        assert mine.flags.writeable      # caller buffer untouched
+        h = spec.content_hash()
+        mine[:] = 0.0                    # caller keeps mutating their copy
+        assert spec.content_hash() == h  # spec is isolated
+        assert spec.dur is not mine
+
+    def test_model_identity_participates(self):
+        platform, wls, _ = random_scenario(9)
+        a = lower_workloads(platform, [wls], ProportionalShareModel())
+        b = lower_workloads(platform, [wls],
+                            ProportionalShareModel(sensitivity=2.0))
+        assert a != b
+        assert a.content_hash() != b.content_hash()
+
+    def test_concat_specs_matches_separate_runs(self):
+        # two single-candidate specs over the same platform/model
+        rng = random.Random(11)
+        from _prop import random_model, random_platform, random_workloads
+        platform = random_platform(rng)
+        model = random_model(rng, platform)
+        w1 = random_workloads(rng, platform)
+        w2 = random_workloads(rng, platform)
+        w = min(len(w1), len(w2))
+        s1 = lower_workloads(platform, [w1[:w]], model)
+        s2 = lower_workloads(platform, [w2[:w]], model)
+        both = concat_specs([s1, s2])
+        assert both.n == 2
+        bt = simulate_spec(both)
+        for i, s in enumerate((s1, s2)):
+            one = simulate_spec(s)
+            assert bt.makespan[i] == pytest.approx(one.makespan[0],
+                                                   abs=1e-9)
+
+
+class TestLoweringRoundTrip:
+    def test_lower_then_simulate_equals_direct_simulate_20_seeds(self):
+        for seed in range(20):
+            platform, wls, model = random_scenario(seed)
+            ref = simulate(platform, wls, model, record_timeline=False)
+            res = simulate_spec(
+                lower_workloads(platform, [wls], model)).result(0)
+            assert res.makespan == pytest.approx(ref.makespan, abs=1e-6), seed
+            assert res.finish_times == pytest.approx(ref.finish_times,
+                                                     abs=1e-6), seed
+            assert res.contention_ms == pytest.approx(ref.contention_ms,
+                                                      abs=1e-6), seed
+
+    def test_public_batch_wrapper_is_the_same_path(self):
+        platform, wls, model = random_scenario(33)
+        via_wrapper = simulate_batch(platform, [wls], model)
+        via_spec = simulate_spec(lower_workloads(platform, [wls], model))
+        assert via_wrapper.makespan == pytest.approx(via_spec.makespan)
+        np.testing.assert_array_equal(via_wrapper.finish_times,
+                                      via_spec.finish_times)
+
+    @given(spec=problem_specs())
+    @settings(max_examples=examples(25), deadline=None)
+    def test_strategy_specs_simulate_consistently(self, spec):
+        bt = simulate_spec(spec)
+        assert len(bt) == spec.n
+        assert np.isfinite(bt.makespan).all()
+        assert (bt.makespan >= 0).all()
+        # makespan is the max finish time by construction
+        np.testing.assert_allclose(bt.makespan, bt.finish_times.max(axis=1))
+
+    def test_strategy_emits_lowered_specs_directly(self):
+        spec = spec_from_seed(17)
+        assert isinstance(spec, ProblemSpec)
+        assert spec.n >= 1 and spec.w >= 1
+        assert len(spec.models) == len(spec.surfaces)
+
+
+class TestSurfaceLowering:
+    @given(model=contention_models(),
+           own=st.floats(0.0, 1.5), ext=st.floats(0.0, 1.5))
+    @settings(max_examples=examples(100), deadline=None)
+    def test_surface_matches_scalar_model(self, model, own, ext):
+        surface = lower_surface(model)
+        assert surface is not None
+        got = surface_slowdown(surface, np.array([own]), np.array([ext]))
+        assert float(got[0]) == pytest.approx(model.slowdown(own, ext),
+                                              abs=1e-12)
+
+    def test_scaled_tower_folds_factors(self):
+        from repro.core.dynamic import ScaledContentionModel
+        base = ProportionalShareModel(capacity=1.0, sensitivity=2.0)
+        tower = ScaledContentionModel(ScaledContentionModel(base, 1.5), 2.0)
+        surface = lower_surface(tower)
+        assert surface.kind == "proportional"
+        assert surface.factor == pytest.approx(3.0)
+        for own, ext in [(0.9, 0.9), (0.4, 1.1), (1.2, 0.3)]:
+            got = surface_slowdown(surface, np.array([own]), np.array([ext]))
+            assert float(got[0]) == pytest.approx(tower.slowdown(own, ext),
+                                                  abs=1e-12)
+
+    def test_unknown_model_lowers_to_none_but_numpy_still_works(self):
+        class Odd:
+            def slowdown(self, own, external):
+                return 1.0 + own * external
+
+        assert lower_surface(Odd()) is None
+        platform, wls, _ = random_scenario(2)
+        ref = simulate(platform, wls, Odd(), record_timeline=False)
+        res = simulate_batch(platform, [wls], Odd()).result(0)
+        assert res.makespan == pytest.approx(ref.makespan, abs=1e-6)
+
+    def test_scaled_of_opaque_base_lowers_to_none(self):
+        from repro.core.dynamic import ScaledContentionModel
+
+        class Odd:
+            def slowdown(self, own, external):
+                return 1.0 + own * external
+
+        assert lower_surface(ScaledContentionModel(Odd(), 2.0)) is None
+
+    def test_scaled_wrapper_keeps_third_party_vectorized_fast_path(self):
+        """§4.4 rescaling must not drop a register_vectorized_slowdown
+        model to the elementwise fallback (scalar .slowdown per float)."""
+        from repro.core.dynamic import ScaledContentionModel
+        from repro.core.lowering import (register_vectorized_slowdown,
+                                         slowdown_array)
+
+        calls = {"vec": 0}
+
+        class Third:
+            def slowdown(self, own, external):
+                raise AssertionError("elementwise fallback reached")
+
+        def vec(m, own, ext):
+            calls["vec"] += 1
+            return 1.0 + 0.5 * np.asarray(own) * np.asarray(ext)
+
+        register_vectorized_slowdown(Third, vec)
+        wrapped = ScaledContentionModel(Third(), 2.0)
+        own = np.array([0.4, 0.9])
+        ext = np.array([0.8, 0.2])
+        got = slowdown_array(wrapped, own, ext)
+        assert calls["vec"] == 1
+        np.testing.assert_allclose(got, 1.0 + 2.0 * (vec(None, own, ext)
+                                                     - 1.0))
+
+    def test_scaled_vectorized_path_matches_surface_path(self):
+        from repro.core.dynamic import ScaledContentionModel
+        from repro.core.lowering import slowdown_array
+        m = ScaledContentionModel(
+            ProportionalShareModel(capacity=1.0, sensitivity=2.0), 1.75)
+        own = np.array([0.2, 0.9, 1.2])
+        ext = np.array([0.9, 0.9, 0.3])
+        got = slowdown_array(m, own, ext)
+        want = [m.slowdown(o, e) for o, e in zip(own, ext)]
+        np.testing.assert_allclose(got, want, atol=1e-12)
+
+    def test_concat_specs_rejects_mismatched_models(self):
+        platform, wls, _ = random_scenario(21)
+        a = lower_workloads(platform, [wls], ProportionalShareModel())
+        b = lower_workloads(platform, [wls],
+                            ProportionalShareModel(sensitivity=2.5))
+        with pytest.raises(ValueError, match="contention model"):
+            concat_specs([a, b])
+
+    def test_piecewise_surface_kind(self):
+        m = PiecewiseModel((0.2, 0.6, 1.0), (0.2, 0.6, 1.0),
+                           ((1.0, 1.1, 1.3), (1.1, 1.4, 1.7),
+                            (1.3, 1.7, 2.2)))
+        s = lower_surface(m)
+        assert s == SlowdownSurface("piecewise", own_knots=m.own_knots,
+                                    ext_knots=m.ext_knots, table=m.table)
+
+
+class TestEvaluatorLookupErrors:
+    def test_registry_lists_names_on_unknown_evaluator(self):
+        with pytest.raises(KeyError) as ei:
+            registry.get_evaluator("nope")
+        msg = str(ei.value)
+        for name in ("batch", "scalar", "jax", "auto"):
+            assert name in msg
+
+    def test_scheduler_ctor_rejects_unknown_evaluator_with_names(self):
+        with pytest.raises(KeyError) as ei:
+            Scheduler("agx-orin", evaluator="does-not-exist")
+        assert "registered evaluators" in str(ei.value)
+        assert "batch" in str(ei.value)
+
+    def test_jax_evaluator_is_registered_and_auto_stays_batch(self):
+        assert "jax" in registry.evaluator_names()
+        assert registry.resolve_evaluator("auto").name == "batch"

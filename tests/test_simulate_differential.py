@@ -1,4 +1,4 @@
-"""Differential property tests: batch simulator == scalar simulator.
+"""Differential property tests: batch == scalar == jax simulators.
 
 The scalar event-driven simulator (:mod:`repro.core.simulate`) is the
 authoritative evaluator of the paper's Eq. 2-8 timeline; the vectorized
@@ -7,13 +7,18 @@ batch evaluator (:mod:`repro.core.simulate_batch`) must agree with it within
 per-iteration latencies, the contention-interval integral (``contention_ms``
 = Σ (1 - 1/s)·len) and per-accelerator busy time — across randomly generated
 platforms, graphs, assignments, transition delays, ``depends_on`` pipelines,
-``arrival_ms`` offsets and multi-iteration workloads.
+``arrival_ms`` offsets and multi-iteration workloads.  The XLA evaluator
+(:mod:`repro.core.simulate_jax`, ``evaluator="jax"``) is held to the same
+observables at 1e-5 (its float64 mode is ~1e-12 from the NumPy path in
+practice; the looser bound is the cross-backend contract on float32-safe
+inputs), on the random corpus *and* on the three golden Table-6 plan
+fixtures.
 
-Scenarios are generated from a seeded ``random.Random`` so the property is
-"for any seed, batch == scalar on the scenario derived from that seed":
-deterministic under the fallback grid, fully explorable under hypothesis
-(``HYPOTHESIS_PROFILE=thorough`` raises the example count in the scheduled
-CI job).
+Scenarios are generated from a seeded ``random.Random`` (shared generators
+in ``tests/_prop.py``) so the property is "for any seed, all backends agree
+on the scenario derived from that seed": deterministic under the fallback
+grid, fully explorable under hypothesis (``HYPOTHESIS_PROFILE=thorough``
+raises the example count in the scheduled CI job).
 """
 from __future__ import annotations
 
@@ -22,7 +27,9 @@ import random
 import numpy as np
 import pytest
 
-from _prop import contention_models, examples, given, settings, st
+from _prop import (contention_models, examples, given, problem_specs,
+                   random_model, random_platform, random_scenario,
+                   random_workloads, settings, st)
 
 from repro.core.accelerators import Accelerator, Platform
 from repro.core.contention import PiecewiseModel, ProportionalShareModel
@@ -32,105 +39,30 @@ from repro.core.simulate_batch import (simulate_assignments, simulate_batch,
                                        slowdown_array)
 
 TOL = 1e-6
+#: the jax evaluator's cross-backend contract (float32-safe inputs).
+JAX_TOL = 1e-5
+
+try:
+    from repro.core import simulate_jax
+    HAVE_JAX = simulate_jax.HAVE_JAX
+except ImportError:  # pragma: no cover
+    HAVE_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
 
 
-# ---------------------------------------------------------------------------
-# seeded scenario generator
-# ---------------------------------------------------------------------------
-
-def random_platform(rng: random.Random) -> Platform:
-    n_acc = rng.choice([2, 2, 3])
-    names = [f"ACC{i}" for i in range(n_acc)]
-    accs = tuple(
-        Accelerator(a, peak_flops=1e12, mem_bw=1e11,
-                    transition_in_ms=rng.choice([0.0, rng.uniform(0, 0.05)]),
-                    transition_out_ms=rng.choice([0.0, rng.uniform(0, 0.05)]))
-        for a in names)
-    domains = {"EMC": tuple(names)}
-    if n_acc == 3 and rng.random() < 0.5:
-        # overlapping domains: ACC1 contends through both
-        domains = {"EMC": tuple(names[:2]), "AUX": tuple(names[1:])}
-    return Platform(
-        name="rand", accelerators=accs,
-        transition_bw=rng.uniform(5e10, 2e11),
-        domains=domains,
-        domain_bw={d: 1e11 for d in domains})
-
-
-def random_model(rng: random.Random, platform: Platform):
-    def one():
-        if rng.random() < 0.5:
-            return ProportionalShareModel(
-                capacity=rng.uniform(0.8, 1.2),
-                sensitivity=rng.uniform(0.5, 3.0))
-        knots = tuple(sorted(rng.uniform(0.05, 1.3) for _ in range(3)))
-        if len(set(knots)) < 3:
-            return ProportionalShareModel()
-        row = [1.0 + rng.uniform(0, 0.3)]
-        for _ in range(2):
-            row.append(row[-1] + rng.uniform(0, 0.4))
-        table = [tuple(row)]
-        for _ in range(2):
-            table.append(tuple(v + rng.uniform(0, 0.4) for v in table[-1]))
-        return PiecewiseModel(knots, knots, tuple(table))
-
-    if rng.random() < 0.25:           # per-domain mapping form
-        return {d: one() for d in platform.domains}
-    return one()
-
-
-def random_workloads(rng: random.Random, platform: Platform
-                     ) -> list[Workload]:
-    names = list(platform.names)
-    n_wl = rng.randint(1, 3)
-    wls = []
-    for w in range(n_wl):
-        n_groups = rng.randint(1, 4)
-        groups, assignment = [], []
-        for i in range(n_groups):
-            groups.append(LayerGroup(
-                name=f"g{i}",
-                times={a: rng.uniform(0.1, 5.0) for a in names},
-                mem_demand={a: (rng.uniform(0.0, 1.2)
-                                if rng.random() < 0.8 else 0.0)
-                            for a in names},
-                out_bytes=rng.uniform(0.0, 2e8),
-                can_transition_after=rng.random() < 0.8))
-            if i == 0:
-                assignment.append(rng.choice(names))
-            elif groups[i - 1].can_transition_after:
-                assignment.append(rng.choice(names))
-            else:
-                assignment.append(assignment[-1])
-        dep = None
-        if w > 0 and rng.random() < 0.4:
-            dep = rng.randrange(w)
-        wls.append(Workload(
-            DNNGraph(f"net{w}", tuple(groups)), tuple(assignment),
-            iterations=rng.randint(1, 3), depends_on=dep,
-            arrival_ms=rng.choice([0.0, rng.uniform(0.0, 3.0)])))
-    return wls
-
-
-def random_scenario(seed: int):
-    rng = random.Random(seed)
-    platform = random_platform(rng)
-    return platform, random_workloads(rng, platform), random_model(
-        rng, platform)
-
-
-def assert_equivalent(ref, res, context=""):
+def assert_equivalent(ref, res, context="", tol=TOL):
     __tracebackhide__ = True
-    assert res.makespan == pytest.approx(ref.makespan, abs=TOL), context
-    assert res.finish_times == pytest.approx(ref.finish_times, abs=TOL), \
+    assert res.makespan == pytest.approx(ref.makespan, abs=tol), context
+    assert res.finish_times == pytest.approx(ref.finish_times, abs=tol), \
         context
     assert len(res.iteration_latencies) == len(ref.iteration_latencies)
     for a, b in zip(res.iteration_latencies, ref.iteration_latencies):
-        assert a == pytest.approx(b, abs=TOL), context
-    assert res.contention_ms == pytest.approx(ref.contention_ms, abs=TOL), \
+        assert a == pytest.approx(b, abs=tol), context
+    assert res.contention_ms == pytest.approx(ref.contention_ms, abs=tol), \
         context
     for acc, t in ref.busy_ms.items():
-        assert res.busy_ms[acc] == pytest.approx(t, abs=TOL), context
+        assert res.busy_ms[acc] == pytest.approx(t, abs=tol), context
 
 
 # ---------------------------------------------------------------------------
@@ -329,6 +261,173 @@ class TestTargetedDifferential:
         assert bt.objective("latency").shape == (0,)
 
 
+@needs_jax
+class TestJaxDifferential:
+    """Three-way parity: the XLA evaluator against scalar and batch.
+
+    Covers the full random corpus (transition delays, ``depends_on``
+    pipelines, ``arrival_ms`` offsets, multi-iteration workloads,
+    per-domain model mappings) plus the assignment fast path and both
+    precisions.
+    """
+
+    @given(seed=st.integers(min_value=0, max_value=10_000_000))
+    @settings(max_examples=examples(60), deadline=None)
+    def test_jax_matches_scalar_and_batch_on_random_scenarios(self, seed):
+        platform, wls, model = random_scenario(seed)
+        ref = simulate(platform, wls, model, record_timeline=False)
+        res_b = simulate_batch(platform, [wls], model).result(0)
+        res_j = simulate_jax.simulate_batch(platform, [wls], model).result(0)
+        assert_equivalent(ref, res_j, f"seed={seed} jax-vs-scalar",
+                          tol=JAX_TOL)
+        assert_equivalent(res_b, res_j, f"seed={seed} jax-vs-batch",
+                          tol=JAX_TOL)
+
+    @given(seed=st.integers(min_value=0, max_value=1_000_000))
+    @settings(max_examples=examples(15), deadline=None)
+    def test_jax_population_members_are_independent(self, seed):
+        rng = random.Random(seed)
+        platform = random_platform(rng)
+        model = random_model(rng, platform)
+        batch = [random_workloads(rng, platform) for _ in range(6)]
+        w = min(len(b) for b in batch)
+        batch = [b[:w] for b in batch]
+        bt = simulate_jax.simulate_batch(platform, batch, model)
+        for i, wls in enumerate(batch):
+            ref = simulate(platform, wls, model, record_timeline=False)
+            assert_equivalent(ref, bt.result(i), f"seed={seed} cand={i}",
+                              tol=JAX_TOL)
+
+    def test_assignment_path_three_way(self):
+        plat = Platform(
+            name="t", accelerators=(
+                Accelerator("A", 1e12, 1e11, transition_in_ms=0.01,
+                            transition_out_ms=0.02),
+                Accelerator("B", 1e12, 1e11, transition_in_ms=0.03,
+                            transition_out_ms=0.04)),
+            transition_bw=1e11,
+            domains={"EMC": ("A", "B")}, domain_bw={"EMC": 1e11})
+        model = ProportionalShareModel(capacity=1.0, sensitivity=2.0)
+        g1 = DNNGraph("g1", (
+            LayerGroup("a", {"A": 1.0, "B": 2.0}, {"A": 0.9, "B": 0.6},
+                       out_bytes=1e8),
+            LayerGroup("b", {"A": 2.0, "B": 1.0}, {"A": 0.5, "B": 0.8})))
+        g2 = DNNGraph("g2", (
+            LayerGroup("c", {"A": 1.5, "B": 1.5}, {"A": 0.7, "B": 0.7}),))
+        combos = [(("A", "A"), ("B",)), (("A", "B"), ("A",)),
+                  (("B", "B"), ("B",)), (("B", "A"), ("A",))]
+        kw = dict(iterations=[2, 3], depends_on=[None, 0])
+        bt_np = simulate_assignments(plat, [g1, g2], combos, model, **kw)
+        bt_j = simulate_jax.simulate_assignments(plat, [g1, g2], combos,
+                                                 model, **kw)
+        for i, (a1, a2) in enumerate(combos):
+            ref = simulate(plat, [
+                Workload(g1, a1, iterations=2),
+                Workload(g2, a2, iterations=3, depends_on=0)],
+                model, record_timeline=False)
+            assert_equivalent(ref, bt_j.result(i), f"cand={i}", tol=JAX_TOL)
+            assert_equivalent(bt_np.result(i), bt_j.result(i), f"cand={i}",
+                              tol=JAX_TOL)
+        for kind in ("latency", "throughput", "sum_inverse"):
+            assert bt_j.objective(kind) == pytest.approx(
+                bt_np.objective(kind), rel=1e-6, abs=JAX_TOL)
+
+    @given(spec=problem_specs())
+    @settings(max_examples=examples(20), deadline=None)
+    def test_spec_level_parity_numpy_vs_jax(self, spec):
+        from repro.core.simulate_batch import simulate_spec as np_spec
+        bn = np_spec(spec)
+        bj = simulate_jax.simulate_spec(spec)
+        assert bj.makespan == pytest.approx(bn.makespan, abs=JAX_TOL)
+        assert bj.contention_ms == pytest.approx(bn.contention_ms,
+                                                 abs=JAX_TOL)
+        np.testing.assert_allclose(bj.finish_times, bn.finish_times,
+                                   atol=JAX_TOL)
+
+    def test_float32_precision_ranks_like_x64(self):
+        """float32 is ranking-grade: makespans within ~1e-3 relative."""
+        rng = random.Random(1234)
+        platform = random_platform(rng)
+        model = random_model(rng, platform)
+        batch = [random_workloads(rng, platform) for _ in range(4)]
+        w = min(len(b) for b in batch)
+        batch = [b[:w] for b in batch]
+        b64 = simulate_jax.simulate_batch(platform, batch, model)
+        b32 = simulate_jax.simulate_batch(platform, batch, model,
+                                          precision="float32")
+        assert b32.makespan == pytest.approx(b64.makespan, rel=1e-3)
+
+    def test_unlowerable_model_is_rejected_with_guidance(self):
+        class Odd:
+            def slowdown(self, own, external):
+                return 1.0 + 0.25 * own * external
+
+        platform, wls, _ = random_scenario(42)
+        model = Odd()
+        # NumPy path: works through the elementwise fallback.
+        simulate_batch(platform, [wls], model)
+        with pytest.raises(ValueError, match="register_surface_lowering"):
+            simulate_jax.simulate_batch(platform, [wls], model)
+
+    def test_scaled_model_three_way(self):
+        from repro.core.dynamic import ScaledContentionModel
+        platform, wls, base = random_scenario(77)
+        if isinstance(base, dict):
+            model = {k: ScaledContentionModel(v, 1.5)
+                     for k, v in base.items()}
+        else:
+            model = ScaledContentionModel(base, 1.5)
+        ref = simulate(platform, wls, model, record_timeline=False)
+        assert_equivalent(ref,
+                          simulate_batch(platform, [wls], model).result(0))
+        assert_equivalent(
+            ref, simulate_jax.simulate_batch(platform, [wls], model)
+            .result(0), tol=JAX_TOL)
+
+
+@needs_jax
+class TestJaxGoldenPlans:
+    """The jax evaluator must reproduce the pinned Table-6 fixtures."""
+
+    def _fixtures(self):
+        import pathlib
+        return sorted((pathlib.Path(__file__).parent / "fixtures" /
+                       "plans").glob("*.json"))
+
+    def test_three_way_on_golden_fixtures(self):
+        from repro.core import Plan
+        paths = self._fixtures()
+        assert len(paths) >= 3
+        for path in paths:
+            plan = Plan.load(path)
+            req = plan.request
+            wls = plan.solution.workloads
+            ref = simulate(req.platform, wls, req.model,
+                           record_timeline=False)
+            bt_np = simulate_batch(req.platform, [wls], req.model)
+            bt_j = simulate_jax.simulate_batch(req.platform, [wls],
+                                               req.model)
+            assert ref.makespan == pytest.approx(plan.result.makespan,
+                                                 rel=1e-9), path.stem
+            assert_equivalent(ref, bt_np.result(0), path.stem)
+            assert_equivalent(ref, bt_j.result(0), path.stem, tol=JAX_TOL)
+            assert bt_j.objective(req.objective)[0] == pytest.approx(
+                plan.objective, rel=1e-6), path.stem
+
+    def test_jax_evaluator_reproduces_fixture_solve(self):
+        """End-to-end: solving with evaluator="jax" returns the golden
+        schedule (the evaluator knob steers the search, never the answer)."""
+        from repro.core import Plan, Scheduler
+        path = self._fixtures()[0]
+        golden = Plan.load(path)
+        sched = Scheduler(golden.request.platform,
+                          model=golden.request.model, evaluator="jax")
+        plan = sched.resolve(golden.request)
+        assert plan.evaluator == "jax"
+        assert plan.assignments == golden.assignments
+        assert plan.objective == pytest.approx(golden.objective, rel=1e-9)
+
+
 @pytest.mark.slow
 class TestDifferentialSweep:
     """Wider randomized sweep — scheduled CI job territory."""
@@ -340,3 +439,12 @@ class TestDifferentialSweep:
         ref = simulate(platform, wls, model, record_timeline=False)
         res = simulate_batch(platform, [wls], model).result(0)
         assert_equivalent(ref, res, f"seed={seed}")
+
+    @needs_jax
+    @given(seed=st.integers(min_value=20_000_001, max_value=30_000_000))
+    @settings(max_examples=examples(150), deadline=None)
+    def test_jax_matches_scalar_wide(self, seed):
+        platform, wls, model = random_scenario(seed)
+        ref = simulate(platform, wls, model, record_timeline=False)
+        res = simulate_jax.simulate_batch(platform, [wls], model).result(0)
+        assert_equivalent(ref, res, f"seed={seed}", tol=JAX_TOL)
