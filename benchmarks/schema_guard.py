@@ -1,0 +1,93 @@
+"""Benchmark-artifact schema guard: fail the build on column drift.
+
+``BENCH_simulate.json`` and ``BENCH_profile.json`` are quoted by the
+README and consumed by CI artifact diffing; a benchmark refactor that
+renames or drops a column silently breaks both.  This guard pins the
+required keys (top-level and per-row) of every committed benchmark
+artifact; run it after any benchmark change:
+
+    PYTHONPATH=src python -m benchmarks.schema_guard [PATHS...]
+
+With no arguments it checks the repo-root artifacts that exist;
+``BENCH_simulate.json`` must exist (it is committed), ``BENCH_profile``
+is checked when present.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+#: artifact name -> (required top-level keys, required per-row keys)
+SCHEMAS = {
+    "BENCH_simulate.json": (
+        {"benchmark", "platform", "max_transitions", "pairs", "candidates",
+         "repeats", "lowering_s", "scalar_s", "batch_s",
+         "scalar_cands_per_s", "batch_cands_per_s", "speedup",
+         "max_abs_makespan_diff", "rows"},
+        {"pair", "iterations", "candidates", "best_makespan_ms"},
+    ),
+    "BENCH_profile.json": (
+        {"benchmark", "worst_fit_max_rel_err", "worst_vs_generating",
+         "worst_objective_rel_diff", "rows"},
+        {"platform", "dnns", "generating_model", "fit_kind", "n_samples",
+         "fit_rmse", "fit_max_rel_err", "max_rel_err_vs_generating",
+         "objective_rel_diff", "bundle_hash", "pipeline_s"},
+    ),
+}
+
+#: artifacts that must exist even when no path is passed explicitly.
+REQUIRED = ("BENCH_simulate.json",)
+
+
+def check(path: pathlib.Path) -> list[str]:
+    """Problems with one artifact ([] = schema holds)."""
+    schema = SCHEMAS.get(path.name)
+    if schema is None:
+        return [f"{path.name}: no schema registered "
+                f"(known: {', '.join(sorted(SCHEMAS))})"]
+    top_required, row_required = schema
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as exc:
+        return [f"{path}: unreadable ({exc})"]
+    problems = [f"{path.name}: missing top-level key {k!r}"
+                for k in sorted(top_required - set(data))]
+    rows = data.get("rows", [])
+    if not isinstance(rows, list) or not rows:
+        problems.append(f"{path.name}: 'rows' must be a non-empty list")
+        return problems
+    for i, row in enumerate(rows):
+        missing = row_required - set(row)
+        if missing:
+            problems.append(f"{path.name}: rows[{i}] missing "
+                            f"{', '.join(sorted(missing))}")
+    return problems
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv:
+        paths = [pathlib.Path(a) for a in argv]
+    else:
+        paths = [ROOT / name for name in SCHEMAS
+                 if (ROOT / name).exists() or name in REQUIRED]
+    problems = []
+    for p in paths:
+        if not p.exists():
+            problems.append(f"{p}: missing (required benchmark artifact)")
+            continue
+        found = check(p)
+        problems.extend(found)
+        if not found:
+            print(f"{p.name}: schema OK "
+                  f"({len(json.loads(p.read_text())['rows'])} rows)")
+    for msg in problems:
+        print(f"ERROR: {msg}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,82 @@
+"""Measured profiles end-to-end: profile -> calibrate -> bundle -> solve.
+
+Runs the whole repro.profiling pipeline on the deterministic virtual SoC
+(CPU, well under a minute):
+
+1. *Profile*: time every layer group of VGG-19 + ResNet101 on the virtual
+   Xavier AGX (warmup/repetition/outlier-rejection discipline), reading
+   the requested-memory-throughput counters — the paper's §3.2 one-time
+   characterization, measured instead of copied from Table 2.
+2. *Calibrate*: co-run each group against the streaming antagonist sweep
+   and fit a monotone PCCS surface (PiecewiseModel) to the
+   (own, external) -> slowdown samples by JAX least squares.
+3. *Bundle*: pack platform + measured graphs + calibrated model into a
+   content-hashed ProfileBundle, round-trip it through JSON.
+4. *Schedule*: solve the Fig.-1-style VGG19+ResNet101 scenario straight
+   from the bundle and compare with the plan under the generating model.
+
+    PYTHONPATH=src python examples/profile_and_schedule.py
+"""
+import tempfile
+import time
+
+from repro import profiling
+from repro.core import Scheduler
+from repro.core.accelerators import xavier_agx
+from repro.core.profiles import get_graph
+
+t0 = time.time()
+platform = xavier_agx()
+truth_graphs = [get_graph(d, platform) for d in ("vgg19", "resnet101")]
+
+print("=" * 70)
+print("1. profile on the virtual SoC (generating model: paper-like PCCS)")
+print("=" * 70)
+vsoc = profiling.VirtualSoC(platform, truth_graphs, noise=0.003,
+                            outlier_rate=0.05, seed=0)
+measured = profiling.profile_graphs(vsoc)
+for g in measured:
+    truth = next(t for t in truth_graphs if t.name == g.name)
+    err = max(abs(mg.time_on(a) - tg.time_on(a)) / tg.time_on(a)
+              for mg, tg in zip(g.groups, truth.groups) for a in tg.times)
+    print(f"  {g.name}: {len(g)} groups measured, "
+          f"max standalone-time error vs truth {err:.2%}")
+
+print("=" * 70)
+print("2. co-run sweep + PCCS calibration")
+print("=" * 70)
+samples = profiling.corun_sweep(vsoc, measured)
+result = profiling.fit_piecewise(samples)
+print(f"  {result.summary()}")
+worst = max(abs(result.model.slowdown(o, e) - vsoc.true_slowdown("GPU", o, e))
+            / vsoc.true_slowdown("GPU", o, e) for o, e, _ in samples)
+print(f"  max deviation from the *generating* model on the sampled grid: "
+      f"{worst:.2%}")
+
+print("=" * 70)
+print("3. content-hashed ProfileBundle round-trip")
+print("=" * 70)
+bundle = profiling.ProfileBundle(
+    platform=platform, graphs=measured, model=result.model,
+    samples=tuple(samples),
+    provenance={"fit": result.report.to_dict(), **vsoc.describe()})
+with tempfile.NamedTemporaryFile(suffix=".json") as f:
+    path = bundle.save(f.name)
+    reloaded = profiling.ProfileBundle.load(path)
+assert reloaded.bundle_hash() == bundle.bundle_hash()
+print(bundle.summary())
+
+print("=" * 70)
+print("4. schedule from measured profiles vs generating ground truth")
+print("=" * 70)
+sched = profiling.scheduler_from_bundle(bundle)
+plan = sched.solve(list(bundle.graphs), "latency", max_transitions=2,
+                   deadline_s=20.0)
+truth_plan = Scheduler(platform, model=profiling.paper_like_pccs()).solve(
+    truth_graphs, "latency", max_transitions=2, deadline_s=20.0)
+rel = abs(plan.objective - truth_plan.objective) / truth_plan.objective
+print(plan.summary())
+print(f"  generating-model objective: {truth_plan.objective:.4f} ms")
+print(f"  measured-bundle objective:  {plan.objective:.4f} ms "
+      f"(rel diff {rel:.2%})")
+print(f"done in {time.time() - t0:.1f}s")

@@ -47,7 +47,8 @@ class SolverUnavailable(RuntimeError):
 
 
 class UnknownEntryError(KeyError):
-    """Lookup of an unregistered entry name (solver/evaluator/baseline).
+    """Lookup of an unregistered entry name (solver/evaluator/
+    contention-model/baseline).
 
     A ``KeyError`` whose ``str()`` is the human-readable message (plain
     ``KeyError`` reprs its argument), so CLI surfaces can show it directly;
@@ -413,10 +414,11 @@ def decode_model(cfg: Mapping[str, Any]) -> Any:
         # import of their home module — pull it in before giving up.
         from . import dynamic  # noqa: F401  (registers "scaled")
     if kind not in _MODEL_CODECS:
-        raise KeyError(
-            f"unknown contention model kind {kind!r}; registered: "
-            f"{', '.join(contention_model_names())} — import the module "
-            f"that registers it before loading this plan")
+        raise UnknownEntryError(
+            f"unknown contention model kind {kind!r}; registered "
+            f"contention models: {', '.join(contention_model_names())} — "
+            f"import the module that registers it before loading this "
+            f"plan") from None
     return _MODEL_CODECS[kind].decode(cfg)
 
 

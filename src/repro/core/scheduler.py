@@ -108,6 +108,15 @@ class Scheduler:
                 f"evaluator={self.evaluator!r}, "
                 f"cached={len(self.cache)}, solves={self.solves})")
 
+    @classmethod
+    def from_bundle(cls, bundle, **kwargs) -> "Scheduler":
+        """Scheduler solving from a measured :class:`~repro.profiling.
+        ProfileBundle` (or a path to one): the bundle's platform plus its
+        calibrated contention model.  Schedule the bundle's measured
+        graphs by passing them to :meth:`solve`."""
+        from ..profiling.bundle import scheduler_from_bundle
+        return scheduler_from_bundle(bundle, **kwargs)
+
     # ------------------------------------------------------------------
     def graphs(self, dnns: Sequence[str | DNNGraph]) -> list[DNNGraph]:
         """Resolve paper-profile names / pass through pre-built graphs."""

@@ -40,9 +40,21 @@ def _run_gateway(args) -> int:
              for a in archs]
     budget = (args.budget_slots * max(s.kv_bytes_per_slot for s in specs)
               if args.budget_slots else None)
-    gcfg = GatewayConfig(
-        platform=tpu_pod_split(4, 12, name="v5e-4x12-split"),
-        memory_budget_bytes=budget)
+    platform = tpu_pod_split(4, 12, name="v5e-4x12-split")
+    model = None
+    if args.profile_bundle:
+        from repro.profiling import ProfileBundle
+        bundle = ProfileBundle.load(args.profile_bundle)
+        if len(bundle.platform.names) < 2:
+            print(f"ERROR: profile bundle {args.profile_bundle} measured a "
+                  f"single-accelerator platform; nothing to co-schedule")
+            return 1
+        platform, model = bundle.platform, bundle.model
+        print(f"profile bundle {bundle.bundle_hash()[:12]}: planning on "
+              f"measured platform {platform.name} with calibrated "
+              f"{type(model).__name__}")
+    gcfg = GatewayConfig(platform=platform, model=model,
+                         memory_budget_bytes=budget)
     scheduler = Scheduler(gcfg.platform, gcfg.model,
                           evaluator=args.evaluator)
     if args.plan:
@@ -109,6 +121,11 @@ def main(argv=None):
                     help="serialize the solved gateway Plan to PATH")
     ap.add_argument("--plan-only", action="store_true",
                     help="plan (and optionally save) without serving")
+    ap.add_argument("--profile-bundle", default=None, metavar="PATH",
+                    help="plan the gateway from a measured ProfileBundle "
+                         "(repro.launch.profile): the bundle's platform "
+                         "and calibrated contention model replace the "
+                         "built-in pod split + default model")
     ap.add_argument("--evaluator", default="auto", metavar="NAME",
                     help="candidate-schedule evaluator for any fresh solve: "
                          "a registered evaluator name (batch = vectorized "
@@ -134,6 +151,8 @@ def main(argv=None):
     if args.plan or args.save_plan or args.plan_only:
         if not args.gateway:
             ap.error("--plan/--save-plan/--plan-only require --gateway")
+    if args.profile_bundle and not args.gateway:
+        ap.error("--profile-bundle requires --gateway")
     if args.gateway:
         if not args.co_arch:
             ap.error("--gateway requires --co-arch")

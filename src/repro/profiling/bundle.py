@@ -1,0 +1,184 @@
+"""ProfileBundle: the measured-characterization artifact.
+
+A schedule's quality is bounded by its characterization, so the
+characterization deserves the same artifact treatment as the schedule
+itself (:class:`~repro.core.plan.Plan`): a :class:`ProfileBundle` packs
+the measured platform, the measured per-group graphs, the calibrated
+contention model and the raw (own, external) → slowdown samples into one
+versioned, **content-hashed** JSON document with provenance (executor,
+backend/device, timer config, sample counts, fit residuals).
+
+Loading recomputes the payload hash and refuses a mismatch — a
+hand-edited or format-drifted bundle fails loudly instead of silently
+mis-costing every schedule solved from it.  ``platform_from_bundle`` /
+``scheduler_from_bundle`` close the loop: a
+:class:`~repro.core.scheduler.Scheduler` solves directly from measured
+profiles, no paper tables involved.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+from ..core import registry
+from ..core.accelerators import Platform
+from ..core.graph import DNNGraph
+from ..core.plan import (canonical_hash, graph_from_dict, graph_to_dict,
+                         platform_from_dict, platform_to_dict)
+from .harness import Sample
+
+FORMAT = 1
+
+
+@dataclass
+class ProfileBundle:
+    """Measured platform + graphs + calibrated model, content-addressed."""
+
+    platform: Platform
+    graphs: tuple[DNNGraph, ...]
+    #: the calibrated contention model (any registered codec kind).
+    model: Any
+    #: raw calibration samples, kept for re-fits and residual audits.
+    samples: tuple[Sample, ...] = ()
+    #: executor/backend/device/timer/residual metadata; not part of the
+    #: content hash (it carries timestamps and wall-clock counts).
+    provenance: dict = field(default_factory=dict)
+    created_at: float = field(default_factory=time.time)
+
+    def __post_init__(self):
+        if not self.graphs:
+            raise ValueError("bundle has no measured graphs")
+        self.graphs = tuple(self.graphs)
+        self.samples = tuple(tuple(float(x) for x in s)
+                             for s in self.samples)
+        names = set(self.platform.names)
+        for g in self.graphs:
+            if not names & set(g.accelerators):
+                raise ValueError(
+                    f"measured graph {g.name!r} covers no accelerator of "
+                    f"platform {self.platform.name!r}")
+
+    # -- identity ---------------------------------------------------------
+    def payload_dict(self) -> dict:
+        """The hashed content: everything that affects a solve."""
+        return {
+            "format": FORMAT,
+            "platform": platform_to_dict(self.platform),
+            "graphs": [graph_to_dict(g) for g in self.graphs],
+            "model": registry.encode_model(self.model),
+            "samples": [list(s) for s in self.samples],
+        }
+
+    def bundle_hash(self) -> str:
+        cached = self.__dict__.get("_hash")
+        if cached is None:
+            cached = canonical_hash(self.payload_dict())
+            self.__dict__["_hash"] = cached
+        return cached
+
+    @property
+    def graph_names(self) -> tuple[str, ...]:
+        return tuple(g.name for g in self.graphs)
+
+    def graph(self, name: str) -> DNNGraph:
+        for g in self.graphs:
+            if g.name == name:
+                return g
+        raise KeyError(
+            f"no measured graph {name!r}; bundle has: "
+            f"{', '.join(self.graph_names)}")
+
+    def summary(self) -> str:
+        prov = self.provenance
+        rows = [f"profile-bundle {self.bundle_hash()[:12]} "
+                f"platform={self.platform.name} "
+                f"model={type(self.model).__name__} "
+                f"samples={len(self.samples)}"]
+        if "fit" in prov:
+            f = prov["fit"]
+            rows.append(f"  fit: rmse={f.get('rmse', float('nan')):.4f} "
+                        f"max_rel={f.get('max_rel_err', float('nan')):.2%}")
+        rows.append(f"  executor={prov.get('executor', '?')} "
+                    f"backend={prov.get('jax_backend', 'n/a')} "
+                    f"device={prov.get('device', 'n/a')}")
+        for g in self.graphs:
+            accs = ", ".join(f"{a}={g.standalone_time(a):.3f}ms"
+                             for a in g.accelerators)
+            rows.append(f"    {g.name}: {len(g)} groups ({accs})")
+        return "\n".join(rows)
+
+    # -- (de)serialization ------------------------------------------------
+    def to_dict(self) -> dict:
+        return {**self.payload_dict(),
+                "bundle_hash": self.bundle_hash(),
+                "provenance": dict(self.provenance),
+                "created_at": self.created_at}
+
+    def to_json(self, indent: int | None = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ProfileBundle":
+        if d.get("format") != FORMAT:
+            raise ValueError(
+                f"unsupported profile-bundle format {d.get('format')!r} "
+                f"(this build reads format {FORMAT})")
+        bundle = cls(
+            platform=platform_from_dict(d["platform"]),
+            graphs=tuple(graph_from_dict(g) for g in d["graphs"]),
+            model=registry.decode_model(d["model"]),
+            samples=tuple(tuple(s) for s in d["samples"]),
+            provenance=dict(d.get("provenance", {})),
+            created_at=d.get("created_at", 0.0),
+        )
+        recomputed = bundle.bundle_hash()
+        if recomputed != d["bundle_hash"]:
+            raise ValueError(
+                "profile bundle is corrupt or was produced by an "
+                f"incompatible build: stored hash {d['bundle_hash'][:12]} "
+                f"!= recomputed {recomputed[:12]}")
+        return bundle
+
+    @classmethod
+    def from_json(cls, s: str) -> "ProfileBundle":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str | pathlib.Path) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(self.to_json())
+        return path
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "ProfileBundle":
+        return cls.from_json(pathlib.Path(path).read_text())
+
+
+def platform_from_bundle(bundle: ProfileBundle | str | pathlib.Path
+                         ) -> Platform:
+    """The measured platform of a bundle (accepts a path for CLI use)."""
+    if not isinstance(bundle, ProfileBundle):
+        bundle = ProfileBundle.load(bundle)
+    return bundle.platform
+
+
+def scheduler_from_bundle(bundle: ProfileBundle | str | pathlib.Path,
+                          **kwargs):
+    """A :class:`~repro.core.scheduler.Scheduler` solving from measured
+    profiles: the bundle's platform + its calibrated contention model.
+
+    Schedule the bundle's *measured* graphs by passing them (or their
+    names resolved via :meth:`ProfileBundle.graph`) to ``solve``::
+
+        sched = scheduler_from_bundle("artifacts/profiles/orin.json")
+        plan = sched.solve([b.graph("vgg19"), b.graph("resnet152")])
+    """
+    from ..core.scheduler import Scheduler
+
+    if not isinstance(bundle, ProfileBundle):
+        bundle = ProfileBundle.load(bundle)
+    kwargs.setdefault("model", bundle.model)
+    return Scheduler(bundle.platform, **kwargs)

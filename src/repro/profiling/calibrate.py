@@ -1,0 +1,261 @@
+"""PCCS calibration: fit contention models from co-run slowdown samples.
+
+The harness's :func:`~repro.profiling.harness.corun_sweep` emits
+(own, external) → slowdown samples; this module fits the repo's
+contention-model classes to them with a JAX least-squares optimizer:
+
+* :func:`fit_piecewise` — PCCS proper.  The knot grid defaults to sample
+  quantiles; table values are fitted by Adam on the *hat-basis bilinear*
+  prediction (the same contraction the evaluators run,
+  :func:`repro.kernels.ref.piecewise_slowdown`), with a monotonicity
+  penalty on negative finite differences along both demand axes and a
+  floor penalty at 1.  After convergence the table is *exactly* projected
+  onto the constraint set (cummax along both axes, clip at 1), so the
+  returned :class:`~repro.core.contention.PiecewiseModel` always
+  validates — slowdown surfaces are physically monotone: more external
+  traffic never speeds you up.
+* :func:`fit_proportional` — the analytic 2-parameter model
+  (capacity, sensitivity), positivity-constrained through softplus.
+
+Both report residuals (:class:`FitReport`) of the *final, projected*
+model against the input samples — the number the acceptance gate and
+``BENCH_profile.json`` track.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from ..core.contention import (PiecewiseModel, ProportionalShareModel,
+                               pccs_from_pairs)
+from .harness import Sample
+
+
+@dataclass(frozen=True)
+class FitReport:
+    """Residuals of a calibrated model against its training samples."""
+
+    rmse: float
+    max_abs_err: float
+    #: max |pred - measured| / measured — the acceptance-gate number.
+    max_rel_err: float
+    n_samples: int
+    steps: int
+    loss_init: float
+    loss_final: float
+
+    def to_dict(self) -> dict:
+        return {k: getattr(self, k) for k in
+                ("rmse", "max_abs_err", "max_rel_err", "n_samples",
+                 "steps", "loss_init", "loss_final")}
+
+
+@dataclass(frozen=True)
+class CalibrationResult:
+    model: PiecewiseModel | ProportionalShareModel
+    report: FitReport
+
+    def summary(self) -> str:
+        r = self.report
+        return (f"{type(self.model).__name__} fitted on {r.n_samples} "
+                f"samples: rmse={r.rmse:.4f} max_rel={r.max_rel_err:.2%} "
+                f"({r.steps} steps, loss {r.loss_init:.3g} -> "
+                f"{r.loss_final:.3g})")
+
+
+def _as_arrays(samples: Sequence[Sample]):
+    arr = np.asarray(samples, dtype=float)
+    if arr.ndim != 2 or arr.shape[1] != 3 or not len(arr):
+        raise ValueError(
+            "samples must be a non-empty sequence of (own, ext, slowdown)")
+    if (arr[:, 2] < 1.0 - 1e-9).any():
+        raise ValueError("measured slowdowns must be >= 1")
+    return arr[:, 0], arr[:, 1], np.maximum(1.0, arr[:, 2])
+
+
+def default_knots(values: np.ndarray, n: int = 5) -> tuple[float, ...]:
+    """Strictly increasing knot grid from sample quantiles.
+
+    When the sweep used <= ``n`` distinct levels the knots *are* those
+    levels (so the fit can interpolate the samples exactly); otherwise
+    evenly spaced quantiles.
+    """
+    uniq = np.unique(np.round(values, 9))
+    if len(uniq) <= n:
+        knots = uniq
+    else:
+        knots = np.unique(np.quantile(uniq, np.linspace(0.0, 1.0, n)))
+    if len(knots) < 2:   # degenerate sweep: widen to a valid 2-knot grid
+        v = float(knots[0]) if len(knots) else 0.5
+        knots = np.asarray([v * 0.5, v]) if v > 0 else np.asarray([0.0, 1.0])
+    return tuple(float(k) for k in knots)
+
+
+def _report(pred: np.ndarray, sd: np.ndarray, steps: int,
+            loss0: float, loss1: float) -> FitReport:
+    err = pred - sd
+    return FitReport(
+        rmse=float(np.sqrt(np.mean(err ** 2))),
+        max_abs_err=float(np.max(np.abs(err))),
+        max_rel_err=float(np.max(np.abs(err) / sd)),
+        n_samples=int(len(sd)), steps=steps,
+        loss_init=float(loss0), loss_final=float(loss1))
+
+
+def _adam(value_and_grad, params, steps: int, lr: float):
+    """Minimal Adam loop (no optax in the container)."""
+    import jax
+    import jax.numpy as jnp
+
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def step(carry, i):
+        p, m, v = carry
+        loss, g = value_and_grad(p)
+        m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, m, g)
+        v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ ** 2, v, g)
+        t = i + 1
+        mhat = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
+        vhat = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
+        p = jax.tree.map(
+            lambda p_, mh, vh: p_ - lr * mh / (jnp.sqrt(vh) + eps),
+            p, mhat, vhat)
+        return (p, m, v), loss
+
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    (params, _, _), losses = jax.lax.scan(
+        step, (params, zeros, zeros), jnp.arange(steps))
+    return params, losses
+
+
+def fit_piecewise(samples: Sequence[Sample], *,
+                  own_knots: Sequence[float] | None = None,
+                  ext_knots: Sequence[float] | None = None,
+                  n_knots: int = 5, steps: int = 300, lr: float = 0.01,
+                  ridge: float = 1e-3,
+                  monotonicity_weight: float = 100.0) -> CalibrationResult:
+    """Fit a monotone :class:`PiecewiseModel` surface by least squares.
+
+    Given fixed knots the hat-basis prediction is *linear* in the table
+    values, so the unconstrained optimum is one ``lstsq`` solve: the
+    design matrix row of sample ``n`` is the outer product of its own/ext
+    hat weights, Tikhonov-regularized toward the inverse-distance warm
+    start so knots without sample support stay anchored instead of going
+    to the minimum-norm zero.  Adam then polishes under the monotonicity
+    penalty (only active when measurement noise makes the raw optimum
+    non-monotone), and the result is exactly projected onto
+    {monotone in both axes, >= 1}.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.ref import _hat_weights, piecewise_slowdown
+
+    own, ext, sd = _as_arrays(samples)
+    ok = np.asarray(own_knots if own_knots is not None
+                    else default_knots(own, n_knots), dtype=float)
+    ek = np.asarray(ext_knots if ext_knots is not None
+                    else default_knots(ext, n_knots), dtype=float)
+    if (np.diff(ok) <= 0).any() or (np.diff(ek) <= 0).any():
+        raise ValueError("knots must be strictly increasing")
+
+    # anchor for unsupported knots: inverse-distance-weighted fill (the
+    # pccs_from_pairs fitter the paper-calibrated profiles used).
+    anchor = np.asarray(pccs_from_pairs(
+        list(zip(own, ext, sd)), own_knots=tuple(ok), ext_knots=tuple(ek)
+    ).table, dtype=float)
+
+    own_j = jnp.asarray(own)
+    ext_j = jnp.asarray(ext)
+    sd_j = jnp.asarray(sd)
+    ok_j = jnp.asarray(ok)
+    ek_j = jnp.asarray(ek)
+
+    # unconstrained optimum: ridge-regularized linear least squares.
+    ho = _hat_weights(ok_j, own_j)                    # (N, K)
+    he = _hat_weights(ek_j, ext_j)                    # (N, M)
+    design = (ho[:, :, None] * he[:, None, :]).reshape(len(own), -1)
+    a = jnp.concatenate(
+        [design, np.sqrt(ridge) * jnp.eye(design.shape[1])])
+    b = jnp.concatenate([sd_j, np.sqrt(ridge) * jnp.asarray(anchor.ravel())])
+    init, *_ = jnp.linalg.lstsq(a, b)
+    init = init.reshape(len(ok), len(ek))
+
+    def loss_fn(table):
+        pred = piecewise_slowdown(own_j, ext_j, ok_j, ek_j, table)
+        mse = jnp.mean((pred - sd_j) ** 2)
+        # physical constraints as penalties; exact projection afterwards.
+        neg_own = jnp.minimum(jnp.diff(table, axis=0), 0.0)
+        neg_ext = jnp.minimum(jnp.diff(table, axis=1), 0.0)
+        floor = jnp.minimum(table - 1.0, 0.0)
+        pen = (jnp.sum(neg_own ** 2) + jnp.sum(neg_ext ** 2)
+               + jnp.sum(floor ** 2))
+        return mse + monotonicity_weight * pen
+
+    init_np = np.asarray(init)
+    already_feasible = (
+        (np.diff(init_np, axis=0) >= 0).all()
+        and (np.diff(init_np, axis=1) >= 0).all()
+        and (init_np >= 1.0).all())
+    if already_feasible or steps <= 0:
+        # the lstsq optimum is feasible: polishing could only trade fit
+        # quality for nothing, so keep it exactly.
+        table, losses = init, jnp.asarray([loss_fn(init)] * 2)
+        steps = 0
+    else:
+        table, losses = _adam(jax.jit(jax.value_and_grad(loss_fn)),
+                              init, steps, lr)
+    # exact projection onto {monotone in both axes, >= 1}.
+    tab = np.maximum(1.0, np.asarray(table))
+    tab = np.maximum.accumulate(tab, axis=0)
+    tab = np.maximum.accumulate(tab, axis=1)
+    model = PiecewiseModel(tuple(ok), tuple(ek),
+                           tuple(tuple(float(v) for v in row)
+                                 for row in tab))
+    pred = np.asarray([model.slowdown(o, e) for o, e in zip(own, ext)])
+    return CalibrationResult(model, _report(
+        pred, sd, steps, float(losses[0]), float(losses[-1])))
+
+
+def fit_proportional(samples: Sequence[Sample], *, steps: int = 400,
+                     lr: float = 0.05) -> CalibrationResult:
+    """Fit :class:`ProportionalShareModel`'s (capacity, sensitivity)."""
+    import jax
+    import jax.numpy as jnp
+
+    own, ext, sd = _as_arrays(samples)
+    own_j, ext_j, sd_j = jnp.asarray(own), jnp.asarray(ext), jnp.asarray(sd)
+
+    def predict(cap, sens):
+        total = own_j + ext_j
+        bound = jnp.minimum(1.0, own_j / cap)
+        s = 1.0 + sens * bound * (total / cap - 1.0)
+        return jnp.where(total <= cap, 1.0, jnp.maximum(1.0, s))
+
+    def loss_fn(p):
+        cap = jax.nn.softplus(p[0])
+        sens = jax.nn.softplus(p[1])
+        return jnp.mean((predict(cap, sens) - sd_j) ** 2)
+
+    # softplus^-1 of (1.0, 1.5): a neutral proportional-share start.
+    p0 = jnp.asarray([0.5413, 1.2412])
+    p, losses = _adam(jax.jit(jax.value_and_grad(loss_fn)), p0, steps, lr)
+    cap = float(jax.nn.softplus(p[0]))
+    sens = float(jax.nn.softplus(p[1]))
+    model = ProportionalShareModel(capacity=cap, sensitivity=sens)
+    pred = np.asarray([model.slowdown(o, e) for o, e in zip(own, ext)])
+    return CalibrationResult(model, _report(
+        pred, sd, steps, float(losses[0]), float(losses[-1])))
+
+
+def fit(samples: Sequence[Sample], kind: str = "piecewise",
+        **kwargs) -> CalibrationResult:
+    """Dispatch by model kind (the CLI's ``--fit`` knob)."""
+    if kind == "piecewise":
+        return fit_piecewise(samples, **kwargs)
+    if kind == "proportional":
+        return fit_proportional(samples, **kwargs)
+    raise ValueError(
+        f"unknown fit kind {kind!r}; one of: piecewise, proportional")

@@ -1,0 +1,383 @@
+"""repro.profiling: harness discipline, virtual SoC, calibration, bundles.
+
+The acceptance loop: profile on the deterministic virtual SoC → calibrate
+a PCCS surface → pack a content-hashed ProfileBundle → solve a Table-6
+style schedule from the bundle — asserting at each stage that the
+measured pipeline reproduces the generating ground truth.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import profiling
+from repro.core import Scheduler
+from repro.core.accelerators import xavier_agx
+from repro.core.contention import PiecewiseModel, ProportionalShareModel
+from repro.core.plan import platform_fingerprint
+from repro.core.profiles import get_graph
+from repro.profiling import (ProfileBundle, TimerConfig, VirtualSoC,
+                             calibrate, paper_like_pccs,
+                             platform_from_bundle, scheduler_from_bundle)
+
+
+@pytest.fixture(scope="module")
+def platform():
+    return xavier_agx()
+
+
+@pytest.fixture(scope="module")
+def truth_graphs(platform):
+    return [get_graph(d, platform) for d in ("vgg19", "resnet101")]
+
+
+@pytest.fixture(scope="module")
+def pipeline(platform, truth_graphs):
+    """One shared profile→calibrate→bundle run (the expensive part)."""
+    vsoc = VirtualSoC(platform, truth_graphs, noise=0.003,
+                      outlier_rate=0.05, seed=0)
+    bundle = profiling.run_pipeline(vsoc)
+    return vsoc, bundle
+
+
+# ---------------------------------------------------------------------------
+# timing discipline
+# ---------------------------------------------------------------------------
+
+class TestTimer:
+    def test_outlier_rejection(self):
+        times = [1.0, 1.02, 0.99, 1.01, 1.0, 5.0, 0.98]
+        kept, rejected = profiling.reject_outliers(times)
+        assert rejected == [5.0]
+        assert 5.0 not in kept and len(kept) == 6
+
+    def test_min_kept_floor(self):
+        # pathological spread: never reject below min_kept samples
+        kept, rejected = profiling.reject_outliers(
+            [1.0, 10.0, 100.0], min_kept=3)
+        assert len(kept) == 3 and not rejected
+
+    def test_zero_mad_keeps_all(self):
+        kept, rejected = profiling.reject_outliers([2.0, 2.0, 2.0, 9.0])
+        # median-absolute-deviation degenerates to 0: nothing is scored
+        assert len(kept) == 4 and not rejected
+
+    def test_measure_samples_applies_discipline(self):
+        seq = iter([7.0, 7.0,           # warmup, discarded
+                    1.0, 1.0, 1.02, 0.98, 1.0, 42.0, 1.01])
+        m = profiling.measure_samples(lambda: next(seq),
+                                      timer=TimerConfig(warmup=2, repeats=7),
+                                      name="synthetic")
+        assert m.rejected_ms == (42.0,)
+        assert m.median_ms == pytest.approx(1.0)
+        assert m.n_total == 7
+
+    def test_measure_wallclock_jax(self):
+        import jax.numpy as jnp
+        x = jnp.ones((64, 64))
+        m = profiling.measure_wallclock(
+            lambda: x @ x, timer=TimerConfig(warmup=1, repeats=3),
+            name="matmul")
+        assert m.median_ms > 0.0
+        assert len(m.kept_ms) >= TimerConfig().min_kept
+
+    def test_timer_config_validates(self):
+        with pytest.raises(ValueError):
+            TimerConfig(repeats=0)
+        t = TimerConfig(warmup=1, repeats=5)
+        assert TimerConfig.from_dict(t.to_dict()) == t
+
+
+# ---------------------------------------------------------------------------
+# virtual SoC
+# ---------------------------------------------------------------------------
+
+class TestVirtualSoC:
+    def test_deterministic(self, platform, truth_graphs):
+        a = VirtualSoC(platform, truth_graphs, seed=7)
+        b = VirtualSoC(platform, truth_graphs, seed=7)
+        seq_a = [a.run_group("vgg19", 0, "GPU", e) for e in (0, 0.5, 0.9)]
+        seq_b = [b.run_group("vgg19", 0, "GPU", e) for e in (0, 0.5, 0.9)]
+        assert seq_a == seq_b
+
+    def test_noise_free_matches_ground_truth(self, platform, truth_graphs):
+        vsoc = VirtualSoC(platform, truth_graphs, noise=0.0, seed=0)
+        g = truth_graphs[0]
+        assert vsoc.run_group(g.name, 1, "GPU") == g.groups[1].time_on("GPU")
+        own = g.groups[1].demand_on("GPU")
+        t_co = vsoc.run_group(g.name, 1, "GPU", external=0.8)
+        want = g.groups[1].time_on("GPU") * paper_like_pccs().slowdown(
+            own, 0.8)
+        assert t_co == pytest.approx(want)
+
+    def test_contention_slows_down(self, platform, truth_graphs):
+        vsoc = VirtualSoC(platform, truth_graphs, noise=0.0, seed=0)
+        base = vsoc.run_group("vgg19", 0, "GPU")
+        assert vsoc.run_group("vgg19", 0, "GPU", external=0.9) > base
+
+
+# ---------------------------------------------------------------------------
+# measured profiles
+# ---------------------------------------------------------------------------
+
+class TestProfileGraphs:
+    def test_measured_times_match_truth(self, pipeline, truth_graphs):
+        _, bundle = pipeline
+        for truth in truth_graphs:
+            measured = bundle.graph(truth.name)
+            assert len(measured) == len(truth)
+            for mg, tg in zip(measured.groups, truth.groups):
+                for acc in tg.times:
+                    assert mg.time_on(acc) == pytest.approx(
+                        tg.time_on(acc), rel=0.05)
+                    assert mg.demand_on(acc) == pytest.approx(
+                        tg.demand_on(acc), rel=0.1)
+
+    def test_samples_cover_demand_grid(self, pipeline):
+        _, bundle = pipeline
+        own = {round(s[0], 3) for s in bundle.samples}
+        ext = {s[1] for s in bundle.samples}
+        assert len(own) > 5 and len(ext) >= 5
+        assert all(s[2] >= 1.0 for s in bundle.samples)
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+class TestCalibrate:
+    def test_acceptance_five_percent(self, pipeline):
+        """Fitted PCCS reproduces the generating model's co-run slowdowns
+        within 5% across the sampled (own, external) grid."""
+        vsoc, bundle = pipeline
+        for own, ext, _ in bundle.samples:
+            true = vsoc.true_slowdown("GPU", own, ext)
+            got = bundle.model.slowdown(own, ext)
+            assert got == pytest.approx(true, rel=0.05)
+
+    def test_fitted_table_is_monotone_and_floored(self, pipeline):
+        _, bundle = pipeline
+        tab = np.asarray(bundle.model.table)
+        assert (tab >= 1.0).all()
+        assert (np.diff(tab, axis=0) >= 0).all()
+        assert (np.diff(tab, axis=1) >= 0).all()
+
+    def test_fit_reports_residuals(self, pipeline):
+        _, bundle = pipeline
+        fit = bundle.provenance["fit"]
+        assert fit["n_samples"] == len(bundle.samples)
+        assert 0.0 <= fit["max_rel_err"] < 0.05
+        assert fit["rmse"] < 0.05
+
+    def test_exactly_representable_surface_recovered(self):
+        truth = paper_like_pccs()
+        rng = np.random.default_rng(1)
+        own = rng.uniform(0.1, 0.95, 400)
+        ext = rng.uniform(0.1, 0.95, 400)
+        samples = [(o, e, truth.slowdown(o, e)) for o, e in zip(own, ext)]
+        r = calibrate.fit_piecewise(samples, own_knots=truth.own_knots,
+                                    ext_knots=truth.ext_knots)
+        assert r.report.max_rel_err < 0.02
+        got = np.asarray(r.model.table)
+        assert np.allclose(got, np.asarray(truth.table), atol=0.05)
+
+    def test_fit_proportional_recovers_parameters(self):
+        truth = ProportionalShareModel(capacity=1.0, sensitivity=3.0)
+        rng = np.random.default_rng(2)
+        own = rng.uniform(0.1, 1.0, 300)
+        ext = rng.uniform(0.1, 1.0, 300)
+        samples = [(o, e, truth.slowdown(o, e)) for o, e in zip(own, ext)]
+        r = calibrate.fit_proportional(samples)
+        assert r.model.capacity == pytest.approx(1.0, abs=0.1)
+        assert r.model.sensitivity == pytest.approx(3.0, abs=0.3)
+
+    def test_noisy_nonmonotone_samples_still_yield_valid_model(self):
+        truth = paper_like_pccs()
+        rng = np.random.default_rng(3)
+        own = rng.uniform(0.1, 0.9, 150)
+        ext = rng.uniform(0.1, 0.9, 150)
+        sd = np.maximum(1.0, [truth.slowdown(o, e) * (1 + 0.08 * z)
+                              for o, e, z in
+                              zip(own, ext, rng.standard_normal(150))])
+        r = calibrate.fit_piecewise(list(zip(own, ext, sd)))
+        tab = np.asarray(r.model.table)       # PiecewiseModel validated it,
+        assert (tab >= 1.0).all()             # but assert the projection
+        assert (np.diff(tab, axis=0) >= -1e-12).all()
+        assert (np.diff(tab, axis=1) >= -1e-12).all()
+
+    def test_rejects_bad_samples(self):
+        with pytest.raises(ValueError):
+            calibrate.fit_piecewise([])
+        with pytest.raises(ValueError):
+            calibrate.fit_piecewise([(0.5, 0.5, 0.2)])   # slowdown < 1
+        with pytest.raises(ValueError):
+            calibrate.fit(
+                [(0.5, 0.5, 1.2)], "gaussian-process")
+
+
+# ---------------------------------------------------------------------------
+# bundle artifact
+# ---------------------------------------------------------------------------
+
+class TestBundle:
+    def test_round_trip_hash_intact(self, pipeline):
+        _, bundle = pipeline
+        again = ProfileBundle.from_json(bundle.to_json())
+        assert again.bundle_hash() == bundle.bundle_hash()
+        assert again.graph_names == bundle.graph_names
+        assert again.model == bundle.model
+        assert again.samples == bundle.samples
+
+    def test_save_load(self, pipeline, tmp_path):
+        _, bundle = pipeline
+        p = bundle.save(tmp_path / "profiles" / "x.json")
+        assert ProfileBundle.load(p).bundle_hash() == bundle.bundle_hash()
+
+    def test_tamper_check(self, pipeline):
+        _, bundle = pipeline
+        d = json.loads(bundle.to_json())
+        d["graphs"][0]["groups"][0]["times"]["GPU"] *= 1.5
+        with pytest.raises(ValueError, match="corrupt|incompatible"):
+            ProfileBundle.from_dict(d)
+
+    def test_format_check(self, pipeline):
+        _, bundle = pipeline
+        d = json.loads(bundle.to_json())
+        d["format"] = 99
+        with pytest.raises(ValueError, match="format"):
+            ProfileBundle.from_dict(d)
+
+    def test_unknown_graph_name(self, pipeline):
+        _, bundle = pipeline
+        with pytest.raises(KeyError, match="vgg19"):
+            bundle.graph("nope")
+
+    def test_platform_from_bundle(self, pipeline, platform, tmp_path):
+        _, bundle = pipeline
+        assert platform_fingerprint(platform_from_bundle(bundle)) == \
+            platform_fingerprint(platform)
+        p = bundle.save(tmp_path / "b.json")
+        assert platform_from_bundle(p).name == platform.name
+
+
+# ---------------------------------------------------------------------------
+# the closed loop: solve from the measured bundle
+# ---------------------------------------------------------------------------
+
+class TestSolveFromBundle:
+    def test_objective_matches_generating_plan(self, pipeline, platform,
+                                               truth_graphs):
+        """Table-6-style scenario solved from measured profiles lands
+        within tolerance of the plan under the generating model."""
+        _, bundle = pipeline
+        sched = scheduler_from_bundle(bundle)
+        plan = sched.solve(list(bundle.graphs), "latency",
+                           max_transitions=2, deadline_s=20.0)
+        truth = Scheduler(platform, model=paper_like_pccs()).solve(
+            truth_graphs, "latency", max_transitions=2, deadline_s=20.0)
+        assert plan.objective == pytest.approx(truth.objective, rel=0.05)
+        # the plan is valid and carries provenance
+        assert plan.optimal or plan.solver == "greedy"
+        assert plan.request.platform.name == platform.name
+
+    def test_scheduler_from_bundle_uses_calibrated_model(self, pipeline):
+        _, bundle = pipeline
+        sched = scheduler_from_bundle(bundle)
+        assert isinstance(sched.model, PiecewiseModel)
+        assert sched.model == bundle.model
+
+    def test_core_scheduler_from_bundle_hook(self, pipeline, tmp_path):
+        _, bundle = pipeline
+        p = bundle.save(tmp_path / "b.json")
+        sched = Scheduler.from_bundle(p)
+        assert sched.platform.name == bundle.platform.name
+        assert sched.model == bundle.model
+
+
+# ---------------------------------------------------------------------------
+# probes + jax harness (local backend, kept tiny)
+# ---------------------------------------------------------------------------
+
+class TestProbes:
+    def test_stream_backends_agree(self):
+        from repro.profiling import probes
+        x, y = probes.make_buffers(0.02)
+        a = np.asarray(probes.stream_once(x, y, backend="xla"))
+        b = np.asarray(probes.stream_once(x, y,
+                                          backend="pallas_interpret"))
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+        with pytest.raises(ValueError, match="unknown backend"):
+            probes.stream_once(x, y, backend="cuda")
+
+    def test_memory_probe_lifecycle(self):
+        from repro.profiling import probes
+        probe = probes.MemoryProbe(demand=0.5, mbytes=0.05, period_ms=2.0)
+        with probe:
+            import time
+            time.sleep(0.05)
+            with pytest.raises(RuntimeError):
+                probe.start()
+        assert probe.passes > 0
+        probe.stop()                          # idempotent
+
+    def test_probe_demand_validated(self):
+        from repro.profiling import probes
+        with pytest.raises(ValueError):
+            probes.MemoryProbe(demand=0.0)
+        with pytest.raises(ValueError):
+            probes.MemoryProbe(demand=1.5)
+
+
+class TestJaxHarness:
+    def test_measure_arch_smoke(self):
+        from repro import configs
+        from repro.configs.base import ShapeCell
+        cfg = configs.get("stablelm-1.6b").reduced()
+        cell = ShapeCell("prefill_64", 64, 1, "prefill")
+        measured = profiling.measure_arch(
+            cfg, cell, backend="xla",
+            timer=TimerConfig(warmup=1, repeats=3), max_groups=1)
+        assert len(measured) == 1
+        mg = measured[0]
+        assert mg.ms > 0.0 and mg.costs.flops > 0 and mg.costs.hbm_bytes > 0
+
+    def test_graph_from_measurements(self, platform):
+        from repro.core.characterize import GroupCosts
+        from repro.profiling.harness import MeasuredGroup, Measurement
+        measured = [MeasuredGroup(
+            GroupCosts(name=f"g{i}", flops=1e9 * (i + 1),
+                       hbm_bytes=1e7 * (i + 1), shared_bytes=1e7 * (i + 1),
+                       out_bytes=1e5),
+            Measurement(f"g{i}", (0.5 + 0.1 * i,))) for i in range(3)]
+        g = profiling.graph_from_measurements("m", platform, measured)
+        assert len(g) == 3
+        # anchor column carries the measured time verbatim
+        assert g.groups[0].time_on("GPU") == pytest.approx(0.5)
+        assert g.groups[0].time_on("DLA") > 0
+        assert 0.0 < g.groups[0].demand_on("GPU") <= 1.5
+        # it is schedulable as-is
+        Scheduler(platform).solve([g], max_transitions=1)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+class TestProfileCLI:
+    def test_virtual_pipeline_with_solve(self, tmp_path, capsys):
+        from repro.launch.profile import main
+        out = tmp_path / "bundle.json"
+        rc = main(["--platform", "xavier-agx", "--dnns", "vgg19",
+                   "resnet101", "--out", str(out), "--solve",
+                   "--repeats", "5"])
+        assert rc == 0
+        text = capsys.readouterr().out
+        assert "round-trip verified" in text
+        assert "rel-diff" in text
+        b = ProfileBundle.load(out)
+        assert b.graph_names == ("vgg19", "resnet101")
+
+    def test_bad_ext_levels_rejected(self):
+        from repro.launch.profile import main
+        with pytest.raises(SystemExit):
+            main(["--ext-levels", "0.5,-1.0"])

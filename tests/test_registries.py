@@ -1,0 +1,78 @@
+"""UnknownEntryError name-listing across every core registry.
+
+PR 4 gave the evaluator registry typo-friendly failures: an unknown name
+raises ``UnknownEntryError`` whose message lists the registered entries.
+This pins the same contract for the solver, contention-model and baseline
+registries, at both the registry layer and the user-facing surfaces
+(``ScheduleRequest``, ``Scheduler``, plan deserialization).
+"""
+import pytest
+
+from repro.core import Scheduler
+from repro.core import registry
+from repro.core.registry import UnknownEntryError
+
+
+class TestSolverRegistry:
+    def test_unknown_name_lists_registered(self):
+        with pytest.raises(UnknownEntryError) as ei:
+            registry.get_solver("simplex")
+        msg = str(ei.value)
+        assert "simplex" in msg
+        for name in registry.solver_names():
+            assert name in msg
+
+    def test_request_fails_at_construction(self):
+        sched = Scheduler("xavier-agx")
+        with pytest.raises(UnknownEntryError, match="greedy"):
+            sched.request(["vgg19"], solver="simplex")
+
+
+class TestEvaluatorRegistry:
+    def test_unknown_name_lists_registered(self):
+        with pytest.raises(UnknownEntryError) as ei:
+            registry.get_evaluator("tensorrt")
+        msg = str(ei.value)
+        for name in registry.evaluator_names():
+            assert name in msg
+
+    def test_scheduler_ctor_fails(self):
+        with pytest.raises(UnknownEntryError, match="scalar"):
+            Scheduler("xavier-agx", evaluator="tensorrt")
+
+
+class TestContentionModelRegistry:
+    def test_unknown_kind_lists_registered(self):
+        with pytest.raises(UnknownEntryError) as ei:
+            registry.decode_model({"kind": "gaussian"})
+        msg = str(ei.value)
+        assert "gaussian" in msg
+        for name in registry.contention_model_names():
+            assert name in msg
+
+    def test_is_a_key_error_with_readable_str(self):
+        # UnknownEntryError subclasses KeyError (call sites catching
+        # KeyError keep working) but str() is the message, not a repr.
+        with pytest.raises(KeyError) as ei:
+            registry.decode_model({"kind": "gaussian"})
+        assert not str(ei.value).startswith("'")
+
+    def test_known_kinds_still_decode(self):
+        m = registry.decode_model(
+            {"kind": "proportional", "capacity": 1.0, "sensitivity": 2.0})
+        assert m.sensitivity == 2.0
+
+
+class TestBaselineRegistry:
+    def test_unknown_name_lists_registered(self):
+        with pytest.raises(UnknownEntryError) as ei:
+            registry.get_baseline("random-placement")
+        msg = str(ei.value)
+        assert "random-placement" in msg
+        for name in registry.baseline_names():
+            assert name in msg
+
+    def test_scheduler_surface(self):
+        sched = Scheduler("xavier-agx")
+        with pytest.raises(UnknownEntryError):
+            sched.evaluate_baseline("random-placement", ["vgg19"])
