@@ -29,6 +29,15 @@ SCHEMAS = {
          "max_abs_makespan_diff", "rows"},
         {"pair", "iterations", "candidates", "best_makespan_ms"},
     ),
+    "BENCH_search.json": (
+        {"benchmark", "platform", "solver", "max_transitions", "pairs",
+         "population", "seed", "repeats", "total_evaluated",
+         "search_cands_per_s", "speedup_vs_jax_eval", "worst_gap_rel",
+         "scenarios", "rows"},
+        {"pair", "iterations", "space", "population", "steps", "evaluated",
+         "search_s", "compile_s", "cands_per_s", "objective_ms",
+         "bb_objective_ms", "gap_rel"},
+    ),
     "BENCH_profile.json": (
         {"benchmark", "worst_fit_max_rel_err", "worst_vs_generating",
          "worst_objective_rel_diff", "rows"},

@@ -484,16 +484,25 @@ def lower_workloads(platform: Platform,
     return b.freeze()
 
 
-def _graph_arrays(platform: Platform, g: DNNGraph,
-                  arr: np.ndarray, validate: bool):
-    """Vectorized per-graph fill: assignment string array (K, len(g)) ->
-    (acc idx, duration, demand, post-group transition delay) arrays."""
+def graph_tables(platform: Platform, g: DNNGraph):
+    """Per-graph (group, accelerator) lookup tables.
+
+    Returns ``(time_t, dem_t, legal, move, tau_pair)``:
+
+    * ``time_t`` (ng, A) — group duration per accelerator, NaN = illegal;
+    * ``dem_t``  (ng, A) — memory demand per accelerator;
+    * ``legal``  (ng,)   — ``can_transition_after`` per group;
+    * ``move``   (ng,)   — output-tensor move time through the shared
+      interconnect when the *next* group runs elsewhere;
+    * ``tau_pair`` (A, A) — per-pair fixed transition in+out cost.
+
+    Shared by the assignment lowering gathers below and by the
+    device-resident search tables (:mod:`repro.core.search_jax`), which
+    mutate assignment indices directly against these tables.
+    """
     names = list(platform.names)
     a_cnt = len(names)
     ng = len(g)
-    if arr.shape[1:] != (ng,):
-        raise ValueError(
-            f"graph {g.name!r}: assignment shape {arr.shape} != (*, {ng})")
     time_t = np.full((ng, a_cnt), np.nan)
     dem_t = np.zeros((ng, a_cnt))
     legal = np.zeros(ng, dtype=bool)
@@ -515,6 +524,20 @@ def _graph_arrays(platform: Platform, g: DNNGraph,
                                     + platform.acc(dst).transition_in_ms)
     move = (out_b / platform.transition_bw / 1e-3
             if platform.transition_bw else np.zeros(ng))
+    return time_t, dem_t, legal, move, tau_pair
+
+
+def _graph_arrays(platform: Platform, g: DNNGraph,
+                  arr: np.ndarray, validate: bool):
+    """Vectorized per-graph fill: assignment string array (K, len(g)) ->
+    (acc idx, duration, demand, post-group transition delay) arrays."""
+    names = list(platform.names)
+    a_cnt = len(names)
+    ng = len(g)
+    if arr.shape[1:] != (ng,):
+        raise ValueError(
+            f"graph {g.name!r}: assignment shape {arr.shape} != (*, {ng})")
+    time_t, dem_t, legal, move, tau_pair = graph_tables(platform, g)
 
     sorted_names = sorted(names)
     to_idx = np.argsort(np.array(names))            # sorted pos -> acc index

@@ -253,6 +253,7 @@ def _solution_to_dict(sol: Solution, request: ScheduleRequest) -> dict:
         "kind": sol.kind,
         "evaluated": sol.evaluated,
         "optimal": sol.optimal,
+        "params": dict(getattr(sol, "params", {}) or {}),
     }
 
 
@@ -271,8 +272,9 @@ def _solution_from_dict(d: Mapping[str, Any],
         contention_ms=r["contention_ms"],
         busy_ms=dict(r["busy_ms"]),
     )
+    # absent in pre-anneal artifacts: exact solvers carry no params.
     return Solution(wls, res, d["objective"], d["kind"], d["evaluated"],
-                    d["optimal"])
+                    d["optimal"], params=dict(d.get("params", {})))
 
 
 # ---------------------------------------------------------------------------
@@ -294,6 +296,10 @@ class Plan:
     #: only — the recorded result always comes from the scalar simulator,
     #: and the request hash is evaluator-independent.
     evaluator: str = "scalar"
+    #: solver-specific provenance copied from ``Solution.params`` (e.g. the
+    #: anneal entry's seed / steps / population); empty for exact solvers.
+    #: Like ``evaluator``, never part of the request hash.
+    solver_params: dict = field(default_factory=dict)
     created_at: float = field(default_factory=time.time)
 
     # -- convenience views ------------------------------------------------
@@ -315,8 +321,10 @@ class Plan:
 
     def summary(self) -> str:
         res = self.solution.result
+        seed = self.solver_params.get("seed")
         rows = [f"plan {self.request_hash[:12]} solver={self.solver} "
-                f"evaluator={self.evaluator} "
+                + (f"seed={seed} " if seed is not None else "")
+                + f"evaluator={self.evaluator} "
                 f"objective={self.solution.kind}={self.objective:.4f} "
                 f"optimal={self.optimal} solve={self.solve_time_s:.3f}s",
                 f"  platform={self.request.platform.name} "
@@ -336,6 +344,7 @@ class Plan:
             "request_hash": self.request_hash,
             "platform_fingerprint": self.platform_fingerprint,
             "evaluator": self.evaluator,
+            "solver_params": dict(self.solver_params),
             "created_at": self.created_at,
         }
 
@@ -364,6 +373,8 @@ class Plan:
             platform_fingerprint=d["platform_fingerprint"],
             # absent in pre-batch-evaluator artifacts: those searched scalar.
             evaluator=d.get("evaluator", "scalar"),
+            # absent in pre-anneal artifacts: exact solvers have no params.
+            solver_params=dict(d.get("solver_params", {})),
             created_at=d["created_at"],
         )
 

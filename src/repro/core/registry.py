@@ -176,6 +176,25 @@ def _solve_greedy(platform, graphs, model, *, objective, max_transitions,
                                evaluator=evaluator)
 
 
+# priority 30: greedy (20) always succeeds, so "auto" never degrades this
+# far — the device search is strictly opt-in via solver="anneal".
+@register_solver("anneal", priority=30,
+                 available=lambda: _jax_available(),
+                 description="device-resident island annealing over the "
+                             "lowered IR (core.search_jax; jax, opt-in)")
+def _solve_anneal(platform, graphs, model, *, objective, max_transitions,
+                  iterations, depends_on, deadline_s,
+                  evaluator=EVAL_AUTO, **knobs) -> Solution:
+    # deadline-free like bb: the step budget, not wall-clock, bounds the
+    # search.  Extra knobs (seed, population, steps, ...) pass through for
+    # direct registry callers; Scheduler sends only the uniform signature.
+    from . import solver_anneal
+    return solver_anneal.solve(platform, graphs, model, objective=objective,
+                               max_transitions=max_transitions,
+                               iterations=iterations, depends_on=depends_on,
+                               evaluator=evaluator, **knobs)
+
+
 # ---------------------------------------------------------------------------
 # evaluators: how candidate schedules are scored (batch vs scalar)
 # ---------------------------------------------------------------------------

@@ -166,7 +166,9 @@ class Scheduler:
                     solve_time_s=dt, request_hash=h,
                     platform_fingerprint=platform_fingerprint(
                         request.platform),
-                    evaluator=ev)
+                    evaluator=ev,
+                    # getattr: third-party Solutions may predate params.
+                    solver_params=dict(getattr(sol, "params", {}) or {}))
         self.cache.put(plan)
         log.info("solved %s with %s/%s in %.3fs (%s=%.6g, optimal=%s)",
                  h[:12], kind, ev, dt, sol.kind, sol.objective, sol.optimal)

@@ -131,13 +131,21 @@ def _surface_eval(kind: str, params: Mapping[str, Any], own, ext):
     return jnp.where(f == 1.0, s, 1.0 + f * (s - 1.0))
 
 
-@functools.lru_cache(maxsize=None)
-def _compiled_run(kinds: tuple[str, ...], max_it: int):
-    """Build the jitted population evaluator for one surface-kind layout.
+def make_event_machine(kinds: tuple[str, ...], max_it: int,
+                       record: bool = True):
+    """Build one candidate's Eq. 2-8 event machine as a traceable function.
 
-    Shapes/dtypes re-specialize through jit as usual; only the surface
-    kinds (control flow) and the iteration-latency depth (output shape)
-    must be static here.
+    Returns ``one(acc, dur, dem, tau, ngroups, iters, dep, arrival,
+    domshare, model_of_acc, surf_params)``.  With ``record=True`` (the
+    evaluator path) it returns ``(finish, lat, contention, busy, err)``;
+    with ``record=False`` it carries only the state the control flow needs
+    and returns ``(finish, err)`` — the lean variant the device-resident
+    search (:mod:`repro.core.search_jax`) evaluates millions of mutants
+    through, where every objective derives from finish times alone.
+
+    ``kinds`` (surface kinds, control flow) and ``max_it`` (iteration-
+    latency depth / guard budget shape) must be static; shapes and dtypes
+    re-specialize through jit as usual.
     """
 
     def one(acc, dur, dem, tau, ngroups, iters, dep, arrival,
@@ -164,15 +172,17 @@ def _compiled_run(kinds: tuple[str, ...], max_it: int):
         # scalar-simulator guard, per candidate.
         max_waves = (200000 + 200 * jnp.sum(ngroups32 * iters32)).astype(i32)
 
-        def claim(t, group, cur_acc, own, ready, it, started, done, is_run,
+        def claim(t, cur_oh, group, ready, it, started, done, is_run,
                   it_start):
             """One FIFO claim sweep: eligible waiting workloads in
             (ready, index) order take their accelerator if free.  Pure
             recomputation — idempotent when nothing changed since the last
-            sweep, which is what lets the idle jump re-claim in-wave."""
+            sweep, which is what lets the idle jump re-claim in-wave.
+            ``cur_oh`` is the (W, A) accelerator one-hot of ``cur_acc``,
+            hoisted by the caller (it only changes at completions, so one
+            wave's claims and slowdown step share a single build)."""
             dep_ok = (dep32 < 0) | done[dep_row] | (it[dep_row] > it)
             eligible = ~done & ~is_run & dep_ok & (ready <= t + tol)
-            cur_oh = cur_acc[:, None] == arange_a[None, :]      # (W, A)
             acc_busy = (cur_oh & is_run[:, None]).any(0)        # (A,)
             left = eligible
             for _ in range(W):   # static unroll: rank-r claim by argmin
@@ -183,9 +193,10 @@ def _compiled_run(kinds: tuple[str, ...], max_it: int):
                 claim_v = sel & left & ~my_busy  # at most one entry true
                 is_run = is_run | claim_v
                 acc_busy = acc_busy | (cur_oh & claim_v[:, None]).any(0)
-                fresh = claim_v & (group == 0) & ~started
-                it_start = jnp.where(fresh, t, it_start)
-                started = started | fresh
+                if record:   # iteration-start bookkeeping feeds lat only
+                    fresh = claim_v & (group == 0) & ~started
+                    it_start = jnp.where(fresh, t, it_start)
+                    started = started | fresh
                 left = left & ~sel
             return is_run, started, it_start
 
@@ -198,16 +209,19 @@ def _compiled_run(kinds: tuple[str, ...], max_it: int):
             remaining=dur[:, 0].astype(dt),
             ready=arrival.astype(dt),
             it=jnp.zeros(W, i32),
-            it_start=arrival.astype(dt),
-            started=jnp.zeros(W, bool),
             done=jnp.zeros(W, bool),
             is_run=jnp.zeros(W, bool),
             finish=jnp.zeros(W, dt),
-            lat=jnp.full((W, max_it), jnp.nan, dt),
-            contention=jnp.zeros((), dt),
-            busy=jnp.zeros(A, dt),
             err=jnp.zeros((), i32),
         )
+        if record:   # observability state the search ranking never reads
+            state.update(
+                it_start=arrival.astype(dt),
+                started=jnp.zeros(W, bool),
+                lat=jnp.full((W, max_it), jnp.nan, dt),
+                contention=jnp.zeros((), dt),
+                busy=jnp.zeros(A, dt),
+            )
 
         def cond(s):
             return (~s["done"].all()) & (s["guard"] < max_waves)
@@ -216,13 +230,18 @@ def _compiled_run(kinds: tuple[str, ...], max_it: int):
             t = s["t"]
             group, cur_acc, own = s["group"], s["cur_acc"], s["own"]
             remaining, ready = s["remaining"], s["ready"]
-            it, it_start = s["it"], s["it_start"]
-            started, done, is_run = s["started"], s["done"], s["is_run"]
+            it = s["it"]
+            it_start, started = s.get("it_start"), s.get("started")
+            done, is_run = s["done"], s["is_run"]
             err = s["err"]
+            # accelerator one-hot of the wave; cur_acc only changes at
+            # completions (step 5), so both claims and the slowdown step
+            # share one build.
+            cur_oh = cur_acc[:, None] == arange_a[None, :]      # (W, A)
 
             # 1) FIFO claims at the current time.
             is_run, started, it_start = claim(
-                t, group, cur_acc, own, ready, it, started, done, is_run,
+                t, cur_oh, group, ready, it, started, done, is_run,
                 it_start)
             any_run = is_run.any()
 
@@ -236,12 +255,12 @@ def _compiled_run(kinds: tuple[str, ...], max_it: int):
             done = done | dead      # poison-exit the lane; host re-raises
             t = jnp.where(idle & ~dead, tmin, t)
             is_run, started, it_start = claim(
-                t, group, cur_acc, own, ready, it, started, done, is_run,
+                t, cur_oh, group, ready, it, started, done, is_run,
                 it_start)
             any_run = is_run.any()
 
             # 2) per-interval slowdowns from the lowered surfaces.
-            cur_ohf = (cur_acc[:, None] == arange_a[None, :]).astype(dt)
+            cur_ohf = cur_oh.astype(dt)
             own_eff = jnp.where(is_run, own, zero)
             acc_dem = (cur_ohf * own_eff[:, None]).sum(0)       # (A,)
             ext = (cur_ohf * (domshare_t @ acc_dem)[None, :]).sum(1)
@@ -269,9 +288,10 @@ def _compiled_run(kinds: tuple[str, ...], max_it: int):
             # 4) integrate the contention interval.
             prog = jnp.where(is_run, span / slow, zero)
             remaining = remaining - prog
-            contention = s["contention"] + jnp.sum(
-                jnp.where(is_run, span * (1.0 - 1.0 / slow), zero))
-            busy = s["busy"] + (cur_ohf * prog[:, None]).sum(0)
+            if record:
+                contention = s["contention"] + jnp.sum(
+                    jnp.where(is_run, span * (1.0 - 1.0 / slow), zero))
+                busy = s["busy"] + (cur_ohf * prog[:, None]).sum(0)
             t = jnp.where(any_run, horizon, t)
 
             # 5) process completions.
@@ -280,11 +300,14 @@ def _compiled_run(kinds: tuple[str, ...], max_it: int):
             tau_cur = tau[idx, group].astype(dt)
             has_next = fin & (group + 1 < ngroups32)
             last = fin & ~has_next
-            lat = jnp.where(
-                last[:, None] & (jnp.arange(max_it)[None, :] == it[:, None]),
-                (t - it_start)[:, None], s["lat"])
+            if record:
+                lat = jnp.where(
+                    last[:, None]
+                    & (jnp.arange(max_it)[None, :] == it[:, None]),
+                    (t - it_start)[:, None], s["lat"])
             it2 = it + last.astype(i32)
-            started = started & ~last
+            if record:
+                started = started & ~last
             fin_wl = last & (it2 >= iters32)
             done = done | fin_wl
             finish = jnp.where(fin_wl, t, s["finish"])
@@ -300,16 +323,30 @@ def _compiled_run(kinds: tuple[str, ...], max_it: int):
             ready = jnp.where(has_next, t + tau_cur,
                               jnp.where(restart, t, ready))
 
-            return dict(t=t, guard=s["guard"] + 1, group=new_group,
-                        cur_acc=cur_acc, own=own, remaining=remaining,
-                        ready=ready, it=it2, it_start=it_start,
-                        started=started, done=done, is_run=is_run,
-                        finish=finish, lat=lat, contention=contention,
-                        busy=busy, err=err)
+            nxt = dict(t=t, guard=s["guard"] + 1, group=new_group,
+                       cur_acc=cur_acc, own=own, remaining=remaining,
+                       ready=ready, it=it2, done=done, is_run=is_run,
+                       finish=finish, err=err)
+            if record:
+                nxt.update(it_start=it_start, started=started, lat=lat,
+                           contention=contention, busy=busy)
+            return nxt
 
         out = jax.lax.while_loop(cond, body, state)
         err = out["err"] | jnp.where(out["done"].all(), 0, _ERR_GUARD)
-        return out["finish"], out["lat"], out["contention"], out["busy"], err
+        if record:
+            return (out["finish"], out["lat"], out["contention"],
+                    out["busy"], err)
+        return out["finish"], err
+
+    return one
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_run(kinds: tuple[str, ...], max_it: int):
+    """Jitted population evaluator for one surface-kind layout: the full
+    (recording) event machine under ``jax.vmap`` + ``jax.jit``."""
+    one = make_event_machine(kinds, max_it, record=True)
 
     @jax.jit
     def run(acc, dur, dem, tau, ngroups, iters, dep, arrival,

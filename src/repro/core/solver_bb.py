@@ -29,7 +29,7 @@ confirm the incumbent).
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Mapping, Sequence
 
 import numpy as np
@@ -48,6 +48,10 @@ class Solution:
     kind: str
     evaluated: int
     optimal: bool
+    #: solver-specific provenance (seed, steps, population, ...); travels
+    #: into Plan artifacts as ``solver_params``.  Exact solvers leave it
+    #: empty; stochastic ones record what reproduces their run.
+    params: dict = field(default_factory=dict)
 
     @property
     def assignments(self) -> list[tuple[str, ...]]:

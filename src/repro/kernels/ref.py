@@ -52,6 +52,35 @@ def _hat_weights(knots, x):
     return h
 
 
+def anneal_select(cur, prop, best, cur_obj, prop_obj, best_obj, u, temp):
+    """Reference Metropolis accept + incumbent select over a population.
+
+    ``cur``/``prop``/``best`` are (P, L) assignment rows; ``cur_obj``/
+    ``prop_obj``/``best_obj``/``u`` are (P,); ``temp`` is a scalar
+    temperature.  A proposal is accepted when it does not regress, or with
+    the Metropolis probability ``exp(-delta/temp)`` against the uniform
+    draw ``u``; the per-chain incumbent takes every strict improvement
+    (first-found wins on ties).  Chains whose proposal scored non-finite
+    (error-poisoned lanes) always reject.  Returns
+    ``(new_cur, new_cur_obj, new_best, new_best_obj)``.
+    """
+    cur_obj = jnp.asarray(cur_obj)
+    dt = cur_obj.dtype
+    prop_obj = jnp.asarray(prop_obj, dt)
+    best_obj = jnp.asarray(best_obj, dt)
+    u = jnp.asarray(u, dt)
+    temp = jnp.maximum(jnp.asarray(temp, dt), jnp.asarray(1e-30, dt))
+    delta = prop_obj - cur_obj
+    accept = (delta <= 0) | (u < jnp.exp(-delta / temp))
+    accept &= jnp.isfinite(prop_obj)
+    improved = prop_obj < best_obj
+    new_cur = jnp.where(accept[:, None], prop, cur)
+    new_cur_obj = jnp.where(accept, prop_obj, cur_obj)
+    new_best = jnp.where(improved[:, None], prop, best)
+    new_best_obj = jnp.where(improved, prop_obj, best_obj)
+    return new_cur, new_cur_obj, new_best, new_best_obj
+
+
 def _gqa_expand(k, n_heads):
     """(B,S,Hkv,D) -> (B,S,Hq,D) by repeating kv heads."""
     b, s, hkv, d = k.shape

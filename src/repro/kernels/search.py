@@ -1,0 +1,125 @@
+"""Annealing select step (Metropolis accept + incumbent update) as a kernel.
+
+The inner step of the device-resident schedule search
+(:mod:`repro.core.search_jax`) is, per temperature step: every chain's
+mutated assignment row has been scored by the event machine, and the
+population must be *selected* — Metropolis-accept each proposal against the
+chain's current state and fold strict improvements into the per-chain
+incumbent.  That step is one elementwise decision broadcast across a
+(P, L) block of assignment rows: a natural Pallas kernel, blocked over the
+chain axis with the row length riding whole.
+
+Backends follow the repo-wide dispatch idiom (:mod:`repro.kernels.slowdown`):
+
+  * ``pallas``           — Mosaic lowering on TPU;
+  * ``pallas_interpret`` — same kernel body, interpreted (tests on CPU);
+  * ``xla``              — the identical decision in pure jnp
+                           (:func:`repro.kernels.ref.anneal_select`), used
+                           on CPU where a kernel launch cannot pay for
+                           itself;
+  * ``auto``             — pallas on TPU for big populations, xla otherwise.
+
+All backends compute the same accept predicate from the same uniform draws,
+so the search incumbent is bit-identical across them — pinned by
+``tests/test_search.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import anneal_select as _ref_select
+
+#: below this many chains a pallas launch cannot pay for itself —
+#: ``backend="auto"`` stays on the fused-XLA decision instead.
+_MIN_PALLAS_CHAINS = 1024
+
+
+def _kernel(cur_ref, prop_ref, best_ref, curo_ref, propo_ref, besto_ref,
+            u_ref, temp_ref, out_cur_ref, out_curo_ref, out_best_ref,
+            out_besto_ref):
+    cur = cur_ref[...]                       # (B, L) int32
+    prop = prop_ref[...]
+    best = best_ref[...]
+    curo = curo_ref[...][0]                  # (B,)
+    propo = propo_ref[...][0]
+    besto = besto_ref[...][0]
+    u = u_ref[...][0]
+    temp = jnp.maximum(temp_ref[0, 0], jnp.asarray(1e-30, curo.dtype))
+    delta = propo - curo
+    accept = (delta <= 0) | (u < jnp.exp(-delta / temp))
+    accept &= jnp.isfinite(propo)
+    improved = propo < besto
+    out_cur_ref[...] = jnp.where(accept[:, None], prop, cur)
+    out_curo_ref[...] = jnp.where(accept, propo, curo)[None, :]
+    out_best_ref[...] = jnp.where(improved[:, None], prop, best)
+    out_besto_ref[...] = jnp.where(improved, propo, besto)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _pallas_select(cur, prop, best, cur_obj, prop_obj, best_obj, u, temp, *,
+                   block: int, interpret: bool):
+    p, l = cur.shape
+    nb = pl.cdiv(p, block)
+    pad = nb * block - p
+    if pad:
+        cur, prop, best = (jnp.pad(a, ((0, pad), (0, 0)))
+                           for a in (cur, prop, best))
+        cur_obj, prop_obj, best_obj, u = (
+            jnp.pad(a, (0, pad)) for a in (cur_obj, prop_obj, best_obj, u))
+    row = pl.BlockSpec((block, l), lambda i: (i, 0))
+    col = pl.BlockSpec((1, block), lambda i: (i, 0))
+    dt = cur_obj.dtype
+    out = pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[row, row, row, col, col, col, col,
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=[row, col, row, col],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb * block, l), cur.dtype),
+            jax.ShapeDtypeStruct((nb, block), dt),
+            jax.ShapeDtypeStruct((nb * block, l), cur.dtype),
+            jax.ShapeDtypeStruct((nb, block), dt),
+        ],
+        interpret=interpret,
+    )(cur, prop, best,
+      cur_obj.reshape(nb, block), prop_obj.reshape(nb, block),
+      best_obj.reshape(nb, block), u.reshape(nb, block),
+      temp.reshape(1, 1).astype(dt))
+    return (out[0][:p], out[1].reshape(-1)[:p],
+            out[2][:p], out[3].reshape(-1)[:p])
+
+
+def anneal_select(cur, prop, best, cur_obj, prop_obj, best_obj, u, temp, *,
+                  backend: str = "auto", block: int = 256):
+    """Metropolis accept + per-chain incumbent update over (P, L) rows.
+
+    Semantics (and the reference oracle) live in
+    :func:`repro.kernels.ref.anneal_select`; this wrapper dispatches the
+    same decision to a blocked Pallas kernel or the fused XLA form.
+    Returns ``(new_cur, new_cur_obj, new_best, new_best_obj)``.
+    """
+    cur = jnp.asarray(cur)
+    cur_obj = jnp.asarray(cur_obj)
+    dt = cur_obj.dtype
+    prop_obj = jnp.asarray(prop_obj, dt)
+    best_obj = jnp.asarray(best_obj, dt)
+    u = jnp.asarray(u, dt)
+    temp = jnp.asarray(temp, dt)
+    b = backend
+    if b == "auto":
+        big = cur.shape[0] >= _MIN_PALLAS_CHAINS
+        b = "pallas" if (jax.default_backend() == "tpu" and big) else "xla"
+    if b in ("xla", "ref"):
+        return _ref_select(cur, jnp.asarray(prop), jnp.asarray(best),
+                           cur_obj, prop_obj, best_obj, u, temp)
+    if b in ("pallas", "pallas_interpret"):
+        return _pallas_select(
+            cur, jnp.asarray(prop), jnp.asarray(best), cur_obj, prop_obj,
+            best_obj, u, temp, block=min(block, max(8, cur.shape[0])),
+            interpret=(b == "pallas_interpret"))
+    raise ValueError(f"unknown backend {b!r}")

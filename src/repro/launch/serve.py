@@ -54,7 +54,7 @@ def _run_gateway(args) -> int:
               f"measured platform {platform.name} with calibrated "
               f"{type(model).__name__}")
     gcfg = GatewayConfig(platform=platform, model=model,
-                         memory_budget_bytes=budget)
+                         memory_budget_bytes=budget, solver=args.solver)
     scheduler = Scheduler(gcfg.platform, gcfg.model,
                           evaluator=args.evaluator)
     if args.plan:
@@ -126,6 +126,12 @@ def main(argv=None):
                          "(repro.launch.profile): the bundle's platform "
                          "and calibrated contention model replace the "
                          "built-in pod split + default model")
+    ap.add_argument("--solver", default="auto", metavar="NAME",
+                    help="registry solver entry for any fresh gateway "
+                         "solve: z3 | bb | greedy | anneal (device-resident "
+                         "annealing over the lowered IR; requires jax) | "
+                         "auto = best available by priority. Unknown names "
+                         "fail listing the registered solvers.")
     ap.add_argument("--evaluator", default="auto", metavar="NAME",
                     help="candidate-schedule evaluator for any fresh solve: "
                          "a registered evaluator name (batch = vectorized "
@@ -134,6 +140,18 @@ def main(argv=None):
                          "auto = best available, currently batch). Unknown "
                          "names fail listing the registered evaluators.")
     args = ap.parse_args(argv)
+
+    if args.solver != "auto":
+        from repro.core import registry
+        try:
+            sentry = registry.get_solver(args.solver)
+        except KeyError as exc:       # UnknownEntryError: lists known names
+            ap.error(str(exc))
+        if not sentry.available():
+            avail = [e.name for e in registry.auto_order()]
+            ap.error(f"solver {args.solver!r} is registered but its "
+                     f"backend is not available here (available: "
+                     f"{', '.join(avail) or 'none'})")
 
     if args.evaluator != "auto":
         from repro.core import registry

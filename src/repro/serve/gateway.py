@@ -98,6 +98,9 @@ class GatewayConfig:
     model: ContentionModel | None = None
     #: shared KV budget across every tenant, bytes; None disables throttling.
     memory_budget_bytes: float | None = None
+    #: registry solver entry planning the schedule ("auto" = z3 -> bb ->
+    #: greedy; "anneal" opts into the device-resident search).
+    solver: str = "auto"
     max_transitions: int = 2
     #: layer-group granularity of the phase graphs (body groups per phase).
     body_groups: int = 2
@@ -236,14 +239,15 @@ def plan_gateway(specs: Sequence[TenantSpec],
                           if gr.name.startswith("prefill:"))
     its = list(iterations or [1] * len(specs))
     plan = sched.resolve(sched.request(
-        graphs, gcfg.objective, max_transitions=gcfg.max_transitions,
+        graphs, gcfg.objective, solver=gcfg.solver,
+        max_transitions=gcfg.max_transitions,
         iterations=its, deadline_s=deadline_s))
     sol = plan.solution
     # re-simulate with the timeline recorded — predicted per-step latencies
     # are read off the decode-group intervals.
     res = simulate(plat, sol.workloads, sched.model, record_timeline=True)
     sol = Solution(sol.workloads, res, sol.objective, sol.kind,
-                   sol.evaluated, sol.optimal)
+                   sol.evaluated, sol.optimal, params=dict(sol.params))
     rr = simulate(plat, round_robin_workloads(plat, graphs, its),
                   sched.model, record_timeline=False)
     return GatewayPlan(plat, list(specs), graphs, its, sol, rr, npf,

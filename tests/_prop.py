@@ -42,7 +42,8 @@ _PROFILE = os.environ.get("HYPOTHESIS_PROFILE", "default")
 #: ``@settings(max_examples=...)`` takes precedence over the loaded
 #: profile in hypothesis, so per-test example counts must scale through
 #: this helper for the thorough/ci lanes to mean anything.
-_EXAMPLE_SCALE = {"default": 1.0, "ci": 0.25, "thorough": 5.0}
+_EXAMPLE_SCALE = {"default": 1.0, "ci": 0.25, "thorough": 5.0,
+                  "search": 0.25}
 
 
 def examples(n: int) -> int:
@@ -64,8 +65,14 @@ try:
     settings.register_profile(
         "thorough", deadline=None, derandomize=False,
         suppress_health_check=[HealthCheck.too_slow])
+    # device-search lane: derandomized with a hard example cap — every
+    # example runs a jit-compiled annealer, so iterations stay bounded.
+    settings.register_profile(
+        "search", deadline=None, derandomize=True, max_examples=8,
+        suppress_health_check=[HealthCheck.too_slow])
     settings.load_profile(_PROFILE if _PROFILE in ("default", "ci",
-                                                   "thorough") else "default")
+                                                   "thorough", "search")
+                          else "default")
 except ImportError:  # pragma: no cover - exercised only without hypothesis
     HAVE_HYPOTHESIS = False
 
@@ -340,11 +347,34 @@ def spec_from_seed(seed: int):
     return lower_workloads(platform, [b[:w] for b in batch], model)
 
 
+def search_problem_from_seed(seed: int):
+    """One seeded scenario shaped for the device-resident search: the
+    platform/model plus graphs, iterations, dependency indices and
+    arrivals (the same generator the differential suites draw from)."""
+    rng = _random.Random(seed)
+    platform = random_platform(rng)
+    model = random_model(rng, platform)
+    wls = random_workloads(rng, platform)
+    return (platform, [w.graph for w in wls], model,
+            [w.iterations for w in wls], [w.depends_on for w in wls],
+            [w.arrival_ms for w in wls])
+
+
 if HAVE_HYPOTHESIS:
     def problem_specs():
         """Strategy emitting lowered ProblemSpec instances directly."""
         return st.builds(spec_from_seed,
                          st.integers(min_value=0, max_value=10_000_000))
+
+    def search_problems():
+        """Strategy emitting (platform, graphs, model, iterations,
+        depends_on, arrivals) tuples for the device-resident search."""
+        return st.builds(search_problem_from_seed,
+                         st.integers(min_value=0, max_value=10_000_000))
 else:
     def problem_specs():
         return _Strategy([spec_from_seed(s) for s in (0, 1, 2, 3, 5, 8)])
+
+    def search_problems():
+        return _Strategy([search_problem_from_seed(s)
+                          for s in (0, 1, 2, 3, 5, 8)])

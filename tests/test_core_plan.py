@@ -135,6 +135,47 @@ class TestPlanRoundTrip:
 
 
 # ---------------------------------------------------------------------------
+# solver provenance (PR 6)
+# ---------------------------------------------------------------------------
+
+class TestSolverProvenance:
+    @pytest.mark.skipif(not registry.get_solver("anneal").available(),
+                        reason="jax not installed")
+    def test_anneal_plan_records_params_and_round_trips(self):
+        sched = small_scheduler()
+        plan = sched.solve(DNNS, solver="anneal", max_transitions=1,
+                           evaluator="batch")
+        assert plan.solver == "anneal"
+        for key in ("seed", "steps", "population"):
+            assert key in plan.solver_params
+        assert plan.solver_params["seed"] == 0
+        assert "solver=anneal seed=0" in plan.summary()
+        back = Plan.from_json(plan.to_json())
+        assert back.solver_params == plan.solver_params
+        assert back.solution.params == plan.solution.params
+        assert back.to_json() == plan.to_json()
+
+    def test_exact_solver_params_empty(self):
+        sched = small_scheduler()
+        plan = sched.resolve(small_request(sched))
+        assert plan.solver_params == {}
+        assert "seed=" not in plan.summary()
+
+    def test_from_dict_back_compat_pre_provenance_artifacts(self):
+        # PR-5-era artifacts have neither plan-level solver_params nor
+        # solution-level params: they must load with empty provenance.
+        sched = small_scheduler()
+        plan = sched.resolve(small_request(sched))
+        doc = json.loads(plan.to_json())
+        del doc["solver_params"]
+        del doc["solution"]["params"]
+        back = Plan.from_json(json.dumps(doc))
+        assert back.solver_params == {}
+        assert back.solution.params == {}
+        assert back.assignments == plan.assignments
+
+
+# ---------------------------------------------------------------------------
 # PlanCache
 # ---------------------------------------------------------------------------
 

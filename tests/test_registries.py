@@ -27,6 +27,19 @@ class TestSolverRegistry:
         with pytest.raises(UnknownEntryError, match="greedy"):
             sched.request(["vgg19"], solver="simplex")
 
+    def test_anneal_is_registered_and_listed_in_errors(self):
+        # PR 6: the device-resident annealer is a first-class registry
+        # entry — unknown-solver errors must advertise it.
+        assert "anneal" in registry.solver_names()
+        with pytest.raises(UnknownEntryError, match="anneal"):
+            registry.get_solver("simplex")
+
+    def test_anneal_is_opt_in_never_auto(self):
+        # greedy (priority 20) always succeeds, so the auto chain must
+        # stop before the opt-in device search (priority 30).
+        assert (registry.get_solver("greedy").priority
+                < registry.get_solver("anneal").priority)
+
 
 class TestEvaluatorRegistry:
     def test_unknown_name_lists_registered(self):
