@@ -38,6 +38,15 @@ SCHEMAS = {
          "search_s", "compile_s", "cands_per_s", "objective_ms",
          "bb_objective_ms", "gap_rel"},
     ),
+    "BENCH_gateway.json": (
+        {"benchmark", "splits", "tenant_mix", "fleet_tenants", "requests",
+         "seed", "trace_kind", "trace_hash", "base_rps", "burst_rps",
+         "slo_p99_ms", "plan_cold_solves", "plan_cold_s",
+         "cache_boot_solves", "cache_boot_s", "p99_speedup", "rows"},
+        {"policy", "requests", "completed", "shed", "p50_ms", "p99_ms",
+         "sustained_rps", "slo_p99_violations", "served_tenants",
+         "replay_s", "replay_req_per_s"},
+    ),
     "BENCH_profile.json": (
         {"benchmark", "worst_fit_max_rel_err", "worst_vs_generating",
          "worst_objective_rel_diff", "rows"},

@@ -20,7 +20,7 @@ from .lowering import (ProblemSpec, SlowdownSurface, concat_specs,
                        lower_sweep, lower_workloads,
                        register_surface_lowering,
                        register_vectorized_slowdown, slowdown_array)
-from .plan import Plan, PlanCache, ScheduleRequest
+from .plan import Plan, PlanCache, ScheduleRequest, ShardedPlanCache
 from .scheduler import (DEFAULT_POD_MODEL, DEFAULT_SOC_MODEL, Scheduler,
                         default_model, resolve_graphs, resolve_platform)
 from .simulate import Interval, SimResult, Workload, simulate
@@ -42,6 +42,7 @@ __all__ = [
     "slowdown_array",
     "Solution",
     "Plan", "PlanCache", "ScheduleRequest", "Scheduler",
+    "ShardedPlanCache",
     "DEFAULT_POD_MODEL", "DEFAULT_SOC_MODEL",
     "default_model", "resolve_graphs", "resolve_platform",
     "registry",

@@ -403,8 +403,10 @@ class PlanCache:
     ``root=None`` keeps plans in memory only (the default for library use);
     with a directory every solved plan is persisted as
     ``<root>/plan-<hash16>.json`` and later processes hit it cold.
-    ``max_entries`` bounds the in-memory map with FIFO eviction — set it
+    ``max_entries`` bounds the in-memory map with LRU eviction — set it
     for long-running control planes whose request stream is unbounded.
+    Corrupt, truncated or format-drifted disk entries degrade to a miss
+    (logged) instead of raising, so one bad artifact never wedges a boot.
     """
 
     def __init__(self, root: str | pathlib.Path | None = None,
@@ -425,16 +427,21 @@ class PlanCache:
 
     def get(self, request_hash: str) -> Plan | None:
         plan = self._mem.get(request_hash)
-        if plan is None:
+        if plan is not None:
+            # LRU: a hit refreshes recency so hot plans survive eviction.
+            self._mem.pop(request_hash)
+            self._mem[request_hash] = plan
+        else:
             path = self.path_for(request_hash)
             if path is not None and path.exists():
                 try:
                     plan = Plan.load(path)
-                except (ValueError, TypeError, KeyError,
+                except (OSError, ValueError, TypeError, KeyError,
                         json.JSONDecodeError) as exc:
-                    # a corrupt / undecodable artifact (e.g. solved with a
-                    # codec-less model) degrades to a miss — it must not
-                    # poison the cache for every later process.
+                    # a corrupt / truncated / undecodable artifact (e.g.
+                    # solved with a codec-less model, or a writer that died
+                    # mid-save) degrades to a miss — it must not poison the
+                    # cache for every later process.
                     log.warning("ignoring unreadable plan cache file %s "
                                 "(%s); re-solving", path, exc)
                     plan = None
@@ -464,11 +471,78 @@ class PlanCache:
         return path
 
     def _insert(self, plan: Plan) -> None:
+        # re-insert at the recent end so _mem stays LRU-ordered (oldest
+        # access first — Python dicts preserve insertion order).
+        self._mem.pop(plan.request_hash, None)
         self._mem[plan.request_hash] = plan
         if self.max_entries is not None:
-            while len(self._mem) > self.max_entries:     # FIFO eviction
+            while len(self._mem) > self.max_entries:     # LRU eviction
                 self._mem.pop(next(iter(self._mem)))
 
     def clear(self) -> None:
         self._mem.clear()
         self.hits = self.misses = 0
+
+
+class ShardedPlanCache(PlanCache):
+    """Disk-backed :class:`PlanCache` sharded by request-hash prefix.
+
+    A fleet control plane cold-starts hundreds of schedulers against one
+    shared plan store; with a flat directory every process lists and locks
+    the same inode.  Sharding by the first ``shard_chars`` hex digits of
+    the request hash (``<root>/<prefix>/plan-<hash16>.json``) spreads
+    concurrent readers/writers over ``16**shard_chars`` independent
+    directories, and a lookup never scans an index — it is exactly one
+    ``open()`` of a content-addressed path, so a cold boot stays
+    O(load-a-JSON) per plan.
+
+    ``max_disk_entries`` bounds the on-disk store: after every persist the
+    owning shard is trimmed oldest-mtime-first to its share of the budget
+    (``ceil(max_disk_entries / n_shards)``) — eviction never touches other
+    shards, preserving the no-cross-shard-contention property.
+    """
+
+    def __init__(self, root: str | pathlib.Path,
+                 max_entries: int | None = None,
+                 shard_chars: int = 2,
+                 max_disk_entries: int | None = None):
+        if not 1 <= shard_chars <= 8:
+            raise ValueError("shard_chars must be in [1, 8]")
+        super().__init__(root=root, max_entries=max_entries)
+        self.shard_chars = shard_chars
+        self.max_disk_entries = max_disk_entries
+
+    @property
+    def n_shards(self) -> int:
+        return 16 ** self.shard_chars
+
+    def path_for(self, request_hash: str) -> pathlib.Path:
+        shard = request_hash[:self.shard_chars]
+        return self.root / shard / f"plan-{request_hash[:16]}.json"
+
+    def put(self, plan: Plan) -> pathlib.Path | None:
+        path = super().put(plan)
+        if path is not None and self.max_disk_entries is not None:
+            self._trim_shard(path.parent)
+        return path
+
+    def _trim_shard(self, shard_dir: pathlib.Path) -> None:
+        budget = -(-self.max_disk_entries // self.n_shards)    # ceil
+        try:
+            entries = sorted(shard_dir.glob("plan-*.json"),
+                             key=lambda p: p.stat().st_mtime)
+        except OSError:                        # shard raced away: nothing to trim
+            return
+        for stale in entries[:max(0, len(entries) - budget)]:
+            try:
+                stale.unlink()
+                log.info("evicted plan cache file %s (shard over budget)",
+                         stale)
+            except OSError:                    # concurrent eviction lost the race
+                pass
+
+    def disk_entries(self) -> int:
+        """Total persisted plans across every shard (diagnostics only)."""
+        if not self.root.exists():
+            return 0
+        return sum(1 for _ in self.root.glob("*/plan-*.json"))

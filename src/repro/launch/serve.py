@@ -14,6 +14,18 @@ Plan artifacts (pre-solve offline, boot cold with zero solver invocations):
     # later / elsewhere: boot the gateway from the cached artifact
     python -m repro.launch.serve --gateway --arch A --co-arch B \
         --plan artifacts/plans/gw.json
+
+Fleet mode (--fleet) replays a seeded arrival trace through the
+virtual-time fleet gateway: thousands of open-loop tenants multiplexed
+over a pool of solved SoC plans with SLO-aware admission and routing.
+
+    # replay a generated bursty trace at 1k requests, SLO-routed
+    python -m repro.launch.serve --fleet --arch A --co-arch B \
+        --trace "bursty:base=150,burst=1500,n=1000,tenants=200,seed=7" \
+        --slo "p99=400" --cache-root artifacts/plancache
+    # second boot from the sharded cache performs zero solver invocations
+    python -m repro.launch.serve --fleet ... --cache-root artifacts/plancache \
+        --expect-cached
 """
 from __future__ import annotations
 
@@ -100,6 +112,48 @@ def _run_gateway(args) -> int:
     return 0
 
 
+def _run_fleet(args) -> int:
+    from repro.core.accelerators import tpu_pod_split
+    from repro.core.plan import ShardedPlanCache
+    from repro.serve.fleet import (FleetConfig, FleetGateway, build_pool,
+                                   parse_slo, parse_trace_spec)
+    from repro.serve.gateway import GatewayConfig, TenantSpec
+
+    trace = parse_trace_spec(args.trace)
+    print(f"trace: kind={trace.kind} n={len(trace)} "
+          f"tenants={trace.n_tenants} rate={trace.mean_rate_rps:.1f} req/s "
+          f"burstiness={trace.burstiness():.2f} hash={trace.trace_hash()[:12]}")
+
+    # full-size configs: the fleet loop bills service from the solved
+    # schedule's predictions and never builds the models, so planning the
+    # production shapes costs nothing extra.
+    specs = [TenantSpec(a, configs.get(a), max_slots=4, capacity=256,
+                        prompt_len=64, max_new=args.max_new)
+             for a in (args.arch, args.co_arch)]
+    cache = ShardedPlanCache(args.cache_root) if args.cache_root else None
+    splits = [(4, 12), (8, 8), (12, 4)]
+    plats = [tpu_pod_split(a, b, name=f"v5e-{a}x{b}-split")
+             for a, b in splits]
+    budget = (args.budget_slots * max(s.kv_bytes_per_slot for s in specs)
+              if args.budget_slots else None)
+    pool = build_pool(specs, plats, GatewayConfig(solver=args.solver),
+                      cache, slots=8)
+    solves = sum(pp.scheduler.solves for pp in pool)
+    print(f"pool: {len(pool)} plans, {solves} solver invocation(s)")
+    if args.expect_cached and solves:
+        print(f"ERROR: --expect-cached but {solves} fresh solve(s) — the "
+              f"sharded cache at {args.cache_root} did not cover the pool")
+        return 1
+
+    cfg = FleetConfig(policy=args.policy, default_slo=parse_slo(args.slo),
+                      memory_budget_bytes=budget)
+    gw = FleetGateway(pool, n_tenants=trace.n_tenants, cfg=cfg,
+                      capacity_hint=len(trace))
+    rep = gw.replay(trace)
+    print(rep.summary())
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True, choices=configs.ARCHS)
@@ -113,6 +167,27 @@ def main(argv=None):
     ap.add_argument("--shape", default="decode_32k")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--fleet", action="store_true",
+                    help="replay an arrival trace through the virtual-time "
+                         "fleet gateway (requires --co-arch and --trace)")
+    ap.add_argument("--trace", default=None, metavar="SPEC|PATH",
+                    help="arrival trace: a saved trace JSON path or a "
+                         "generator spec like "
+                         "'poisson:rate=200,n=1000,tenants=100,seed=0', "
+                         "'bursty:base=100,burst=1000,n=5000,tenants=200' "
+                         "or 'diurnal:peak=300,n=5000,tenants=500'")
+    ap.add_argument("--slo", default="p99=1000", metavar="SPEC",
+                    help="default tenant SLO, e.g. 'p99=400,rps=5'")
+    ap.add_argument("--policy", default="slo",
+                    choices=("slo", "round_robin"),
+                    help="fleet routing policy (round_robin = baseline)")
+    ap.add_argument("--cache-root", default=None, metavar="DIR",
+                    help="sharded disk-backed plan cache root shared by "
+                         "every pool scheduler; a re-run over the same pool "
+                         "boots with zero solver invocations")
+    ap.add_argument("--expect-cached", action="store_true",
+                    help="fail unless the pool booted entirely from "
+                         "--cache-root (zero fresh solves)")
     ap.add_argument("--plan", default=None, metavar="PATH",
                     help="boot the gateway from a serialized Plan artifact "
                          "(fails if the request is not covered: zero solver "
@@ -165,6 +240,18 @@ def main(argv=None):
             ap.error(f"evaluator {args.evaluator!r} is registered but its "
                      f"backend is not available here (available: "
                      f"{', '.join(avail) or 'none'})")
+
+    if args.fleet:
+        if not args.co_arch:
+            ap.error("--fleet requires --co-arch")
+        if not args.trace:
+            ap.error("--fleet requires --trace")
+        if args.expect_cached and not args.cache_root:
+            ap.error("--expect-cached requires --cache-root")
+        return _run_fleet(args)
+    for flag in ("trace", "cache_root"):
+        if getattr(args, flag):
+            ap.error(f"--{flag.replace('_', '-')} requires --fleet")
 
     if args.plan or args.save_plan or args.plan_only:
         if not args.gateway:

@@ -40,12 +40,23 @@ class Request:
     done: bool = False
 
 
+#: canonical per-tenant telemetry keys shared by every serving layer —
+#: ``ServingEngine.metrics()``, the per-tenant rows of
+#: ``MultiTenantGateway.metrics()`` and ``repro.serve.fleet`` reports all
+#: emit exactly this shape, so a multiplexer consumes one dict format
+#: regardless of which layer produced it.
+METRIC_KEYS = ("steps", "active", "queue_depth", "admitted", "completed",
+               "deferred", "tokens_out", "last_step_ms", "mean_step_ms")
+
+
 @dataclasses.dataclass
 class EngineMetrics:
     """Rolling counters a multiplexer can poll between ``step()`` calls."""
 
     steps: int = 0
     admitted: int = 0
+    #: queue->slot admissions refused by the admission gate.
+    deferred: int = 0
     tokens_out: int = 0
     #: wall-clock ms of the most recent decode step (prefills excluded).
     last_step_ms: float = 0.0
@@ -78,7 +89,7 @@ class ServingEngine:
         #: consulted before each queue->slot admission; ``False`` defers the
         #: head request (FIFO is preserved: admission stops for this step).
         self.admission_gate = admission_gate
-        self.metrics = EngineMetrics()
+        self.counters = EngineMetrics()
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new: int = 16, eos: int | None = None
@@ -97,6 +108,21 @@ class ServingEngine:
         """Anything queued or decoding — i.e. ``step()`` would make progress."""
         return bool(self.queue) or self.active > 0
 
+    def metrics(self) -> dict:
+        """Telemetry snapshot in the canonical :data:`METRIC_KEYS` shape."""
+        c = self.counters
+        return {
+            "steps": c.steps,
+            "active": self.active,
+            "queue_depth": len(self.queue),
+            "admitted": c.admitted,
+            "completed": len(self.completed),
+            "deferred": c.deferred,
+            "tokens_out": c.tokens_out,
+            "last_step_ms": c.last_step_ms,
+            "mean_step_ms": c.mean_step_ms,
+        }
+
     # ------------------------------------------------------------------
     def _admit(self):
         for slot in range(self.max_slots):
@@ -104,6 +130,7 @@ class ServingEngine:
                 continue
             if (self.admission_gate is not None
                     and not self.admission_gate(self.queue[0])):
+                self.counters.deferred += 1
                 break
             req = self.queue.popleft()
             batch = {"token_ids": jnp.asarray(req.prompt)[None]}
@@ -125,8 +152,8 @@ class ServingEngine:
             self.slots[slot] = req
             self.lengths[slot] = len(req.prompt)
             self.last_tok[slot] = tok
-            self.metrics.admitted += 1
-            self.metrics.tokens_out += 1
+            self.counters.admitted += 1
+            self.counters.tokens_out += 1
 
     def step(self) -> int:
         """Admit + one batched decode step; returns #active slots.
@@ -144,10 +171,10 @@ class ServingEngine:
                  "lengths": jnp.asarray(self.lengths)}
         logits, self.caches = self._decode(self.params, self.caches, batch)
         toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
-        self.metrics.last_step_ms = (time.perf_counter() - t0) * 1e3
-        self.metrics.decode_ms_total += self.metrics.last_step_ms
-        self.metrics.steps += 1
-        self.metrics.tokens_out += self.active
+        self.counters.last_step_ms = (time.perf_counter() - t0) * 1e3
+        self.counters.decode_ms_total += self.counters.last_step_ms
+        self.counters.steps += 1
+        self.counters.tokens_out += self.active
         self.steps += 1
         for slot, req in enumerate(self.slots):
             if req is None:

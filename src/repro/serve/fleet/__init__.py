@@ -1,0 +1,31 @@
+"""Fleet-scale serving: trace-driven traffic, SLO-aware multiplexing.
+
+The fleet subsystem scales the serving stack from "a handful of tenants,
+one schedule" (:mod:`repro.serve.gateway`) to "thousands of open-loop
+tenants over a small pool of solved SoC plans":
+
+* :mod:`~repro.serve.fleet.traffic` — seeded, bit-deterministic arrival
+  traces (Poisson / bursty MMPP / diurnal replay) with a JSON wire format.
+* :mod:`~repro.serve.fleet.slo` — per-tenant SLO targets driving
+  admission, shedding and plan selection through one shared
+  :class:`AdmissionController`.
+* :mod:`~repro.serve.fleet.loop` — the virtual-time fleet gateway:
+  per-tenant queues, KV-budget admission, earliest-finish SLO routing vs
+  round-robin, per-plan §4.4 slowdown monitoring, an asyncio front-end,
+  and flat-array per-request telemetry (:class:`FleetReport`).
+"""
+from repro.serve.fleet.loop import (FleetConfig, FleetGateway, FleetReport,
+                                    FleetRescheduleEvent, PoolPlan,
+                                    build_pool, serve_async)
+from repro.serve.fleet.slo import SLO, AdmissionController, parse_slo
+from repro.serve.fleet.traffic import (ArrivalTrace, GENERATORS,
+                                       bursty_trace, diurnal_trace,
+                                       parse_trace_spec, poisson_trace)
+
+__all__ = [
+    "ArrivalTrace", "GENERATORS", "bursty_trace", "diurnal_trace",
+    "parse_trace_spec", "poisson_trace",
+    "SLO", "AdmissionController", "parse_slo",
+    "FleetConfig", "FleetGateway", "FleetReport", "FleetRescheduleEvent",
+    "PoolPlan", "build_pool", "serve_async",
+]

@@ -1,0 +1,715 @@
+"""Fleet gateway front-end: multiplex thousands of tenants over a small
+pool of contention-aware SoC plans.
+
+The existing :class:`~repro.serve.gateway.MultiTenantGateway` steps a
+handful of tenants synchronously — one engine per tenant, real compute.
+A fleet control plane faces the opposite shape: *hundreds to thousands*
+of open-loop tenants, a *small* pool of solved SoC plans (one per device
+split / placement the solver produced), and the questions that matter are
+queueing, admission and tail latency, not token values.  This module is
+that front-end:
+
+* :class:`PoolPlan` — one solved multi-tenant schedule
+  (:func:`~repro.serve.gateway.plan_gateway` product) promoted to a fleet
+  serving unit: per-tenant-class predicted decode-step latencies, a slot
+  count, KV bytes per request, and the :class:`~repro.core.Scheduler`
+  that owns its plan cache (re-solves route through it, so §4.4
+  re-schedules are cached/persisted like offline solves).
+* :class:`FleetGateway` — a deterministic virtual-time event machine:
+  arrivals drain into per-tenant queues, the
+  :class:`~repro.serve.fleet.slo.AdmissionController` decides
+  shed/admit/defer and routes each request to a pool plan (SLO-aware
+  earliest-finish or static round-robin), plan slots serve requests with
+  the schedule-predicted service times, and per-request
+  queueing/service/slowdown telemetry is recorded in flat arrays.
+  Replaying a million-request :class:`~repro.serve.fleet.traffic.
+  ArrivalTrace` is a tight Python/heapq loop — no real compute, bit-
+  deterministic, fast enough for CI.
+* **§4.4 in the fleet loop** — per-plan
+  :class:`~repro.core.dynamic.SlowdownMonitor` watches observed step
+  latency against the plan's steady-state floor; external contention
+  (injected via ``contention_events``) fires the monitor, and the gateway
+  re-solves that pool plan under the observed severity
+  (:func:`~repro.core.dynamic.reschedule_plan`), adopting the new
+  assignment only when it genuinely improves the scaled-model objective.
+* :func:`serve_async` — an ``asyncio`` front-end over the same machine:
+  submissions become awaitable completions, arrivals are paced in wall
+  time (``time_scale``), so an interactive service and the virtual-time
+  replay share one implementation.
+
+Wall-clock time never enters the model: the clock is the trace's, service
+times are the solved schedule's predictions, and a replay is reproducible
+bit-for-bit from ``(trace, pool, config)``.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import heapq
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.dynamic import (ScaledContentionModel, SlowdownMonitor,
+                                quantize_severity, reschedule_plan)
+from repro.core.scheduler import Scheduler
+from repro.core.simulate import simulate
+from repro.core.solver_bb import Solution
+from repro.serve.gateway import (GatewayConfig, GatewayPlan, TenantSpec,
+                                 plan_gateway)
+from repro.serve.fleet.slo import SLO, AdmissionController
+from repro.serve.fleet.traffic import ArrivalTrace
+
+# request status codes (FleetReport.status)
+PENDING, RUNNING, DONE, SHED = 0, 1, 2, 3
+
+
+# ---------------------------------------------------------------------------
+# PoolPlan
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PoolPlan:
+    """One solved SoC schedule serving a share of the fleet."""
+
+    name: str
+    plan: GatewayPlan
+    scheduler: Scheduler
+    #: concurrent requests this plan serves (the schedule's batch width).
+    slots: int
+    #: tenant-class names, index-aligned with the step/kv arrays.
+    classes: tuple[str, ...] = field(init=False)
+    #: current predicted decode-step ms per class (includes any applied
+    #: contention severity; the number the loop bills service time from).
+    step_ms: np.ndarray = field(init=False)
+    #: steady-state floor per class (factor 1.0) — the §4.4 baseline.
+    base_step_ms: np.ndarray = field(init=False)
+    #: KV bytes one in-flight request pins, per class.
+    kv_bytes: np.ndarray = field(init=False)
+    #: external contention severity currently applied (1.0 = none).
+    factor: float = 1.0
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError("slots must be >= 1")
+        self.classes = tuple(s.name for s in self.plan.specs)
+        self.base_step_ms = np.array(
+            [self.plan.predicted_decode_step_ms(c) for c in self.classes])
+        if np.any(self.base_step_ms <= 0.0):
+            raise ValueError(
+                f"pool plan {self.name!r}: non-positive predicted decode "
+                f"step — the schedule cannot price service time")
+        self.step_ms = self.base_step_ms.copy()
+        self.kv_bytes = np.array(
+            [float(s.kv_bytes_per_slot) for s in self.plan.specs])
+
+    def service_ms(self, cls: int, max_new: int) -> float:
+        """Predicted service time of one request (decode macro steps)."""
+        return float(self.step_ms[cls]) * max_new
+
+    # -- §4.4 surface ------------------------------------------------------
+    def _steps_under(self, solution: Solution) -> np.ndarray:
+        view = dataclasses.replace(self.plan, solution=solution)
+        return np.array(
+            [view.predicted_decode_step_ms(c) for c in self.classes])
+
+    def apply_factor(self, factor: float) -> None:
+        """Apply external contention severity ``factor`` (1.0 = none).
+
+        Models a co-runner the schedule did not plan for — another
+        workload on the SoC saturating the shared-memory domains — which
+        slows *every* group on this plan multiplicatively.  Observed step
+        latency becomes ``base * factor``, which is exactly the deviation
+        signal the §4.4 :class:`SlowdownMonitor` consumes; the response
+        (:meth:`reschedule`) re-solves under a contention model rescaled
+        to the observed severity.
+        """
+        if factor <= 0.0:
+            raise ValueError("contention factor must be > 0")
+        self.factor = float(factor)
+        self.step_ms = self.base_step_ms * self.factor
+
+    def reschedule(self, observed_factor: float, *, objective: str,
+                   max_transitions: int, budget_s: float) -> tuple[bool, float, float]:
+        """§4.4 re-solve under the observed severity; adopt only if better.
+
+        Returns ``(changed, old_objective, new_objective)`` — both priced
+        under the same scaled model, exactly like
+        ``MultiTenantGateway._reschedule``.
+        """
+        factor = quantize_severity(observed_factor)
+        model = ScaledContentionModel(self.scheduler.model, factor)
+        old = self.plan.solution
+        cur_res = simulate(self.plan.platform, old.workloads, model,
+                           record_timeline=True)
+        cur_obj = cur_res.objective(objective)
+        rplan = reschedule_plan(
+            self.scheduler, self.plan.graphs, factor, objective=objective,
+            max_transitions=max_transitions,
+            iterations=self.plan.iterations, budget_s=budget_s)
+        best = rplan.solution
+        if best.objective < cur_obj - 1e-9:
+            res = simulate(self.plan.platform, best.workloads, model,
+                           record_timeline=True)
+            new = Solution(best.workloads, res, best.objective, best.kind,
+                           best.evaluated, best.optimal)
+            art = rplan
+        else:
+            new = Solution(old.workloads, cur_res, cur_obj, old.kind,
+                           best.evaluated, False)
+            art = self.plan.plan
+        changed = new.assignments != old.assignments
+        self.plan = dataclasses.replace(self.plan, solution=new, plan=art)
+        # steady-state floor follows the adopted assignment; current step
+        # table prices it at the live severity.
+        base_model = self.scheduler.model
+        base_res = simulate(self.plan.platform, new.workloads, base_model,
+                            record_timeline=True)
+        self.base_step_ms = self._steps_under(
+            Solution(new.workloads, base_res,
+                     base_res.objective(objective), new.kind,
+                     new.evaluated, False))
+        self.apply_factor(self.factor)
+        return changed, cur_obj, new.objective
+
+
+def build_pool(specs: Sequence[TenantSpec],
+               platforms: Sequence,
+               gcfg: GatewayConfig | None = None,
+               cache=None, *, slots: int | None = None,
+               deadline_s: float | None = 20.0) -> list[PoolPlan]:
+    """Solve one :class:`PoolPlan` per platform (pod split / SoC).
+
+    All schedulers share ``cache`` — point it at a
+    :class:`~repro.core.plan.ShardedPlanCache` root and a later
+    ``build_pool`` over the same platforms boots every plan from disk
+    with zero solver invocations (each plan is one O(load-a-JSON) read;
+    shards keep concurrent control planes from contending on one index).
+    """
+    pool = []
+    for plat in platforms:
+        cfg = dataclasses.replace(gcfg or GatewayConfig(), platform=plat)
+        sched = Scheduler(cfg.platform, cfg.model, cache=cache)
+        gwplan = plan_gateway(specs, cfg, deadline_s=deadline_s,
+                              scheduler=sched)
+        pool.append(PoolPlan(
+            name=getattr(plat, "name", str(plat)), plan=gwplan,
+            scheduler=sched,
+            slots=slots or sum(s.max_slots for s in specs)))
+    return pool
+
+
+# ---------------------------------------------------------------------------
+# FleetGateway
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """Knobs of the fleet loop (routing + admission + §4.4)."""
+
+    #: "slo" = earliest-predicted-finish routing; "round_robin" = static
+    #: tenant-hash placement (the baseline the benchmark compares against).
+    policy: str = "slo"
+    default_slo: SLO = SLO(p99_ms=1000.0)
+    #: fleet-wide KV budget (bytes); None disables memory admission.
+    memory_budget_bytes: float | None = None
+    max_queue_per_tenant: int = 64
+    shed_factor: float = 4.0
+    objective: str = "throughput"
+    max_transitions: int = 2
+    # ---- §4.4 knobs (per pool plan) ----
+    slowdown_threshold: float = 1.5
+    patience: int = 8
+    cooldown: int = 256
+    warmup: int = 0
+    reschedule_budget_s: float = 0.25
+
+    def __post_init__(self):
+        if self.policy not in ("slo", "round_robin"):
+            raise ValueError(
+                f"unknown policy {self.policy!r} (slo | round_robin)")
+
+
+@dataclass
+class FleetRescheduleEvent:
+    t_ms: float
+    plan: str
+    observed_factor: float
+    old_objective: float
+    new_objective: float
+    changed: bool
+
+
+class _Records:
+    """Flat per-request telemetry, growable (asyncio path) but usually
+    preallocated to the trace length (replay path)."""
+
+    __slots__ = ("n", "tenant", "cls", "plan", "t_arrive", "t_start",
+                 "t_end", "service_ms", "est_ms", "max_new", "status")
+
+    def __init__(self, capacity: int):
+        capacity = max(16, capacity)
+        self.n = 0
+        self.tenant = np.zeros(capacity, np.int32)
+        self.cls = np.zeros(capacity, np.int16)
+        self.plan = np.full(capacity, -1, np.int16)
+        self.t_arrive = np.zeros(capacity, np.float64)
+        self.t_start = np.full(capacity, np.nan)
+        self.t_end = np.full(capacity, np.nan)
+        self.service_ms = np.zeros(capacity, np.float64)
+        self.est_ms = np.zeros(capacity, np.float64)
+        self.max_new = np.zeros(capacity, np.int32)
+        self.status = np.zeros(capacity, np.int8)
+
+    def append(self, tenant: int, cls: int, t: float, max_new: int) -> int:
+        if self.n == len(self.tenant):
+            for name in self.__slots__[1:]:
+                arr = getattr(self, name)
+                grown = np.empty(2 * len(arr), arr.dtype)
+                grown[:len(arr)] = arr
+                setattr(self, name, grown)
+        i = self.n
+        self.tenant[i] = tenant
+        self.cls[i] = cls
+        self.t_arrive[i] = t
+        self.max_new[i] = max_new
+        self.plan[i] = -1
+        self.t_start[i] = np.nan
+        self.t_end[i] = np.nan
+        self.service_ms[i] = 0.0
+        self.est_ms[i] = 0.0
+        self.status[i] = PENDING
+        self.n += 1
+        return i
+
+
+@dataclass
+class FleetReport:
+    """Per-request telemetry + aggregates of one replay."""
+
+    n_tenants: int
+    classes: tuple[str, ...]
+    policy: str
+    tenant: np.ndarray
+    cls: np.ndarray
+    plan: np.ndarray
+    t_arrive: np.ndarray
+    t_start: np.ndarray
+    t_end: np.ndarray
+    service_ms: np.ndarray
+    max_new: np.ndarray
+    status: np.ndarray
+    reschedules: list[FleetRescheduleEvent]
+    shed: int
+    deferred: int
+    slos: Mapping[int, SLO]
+    default_slo: SLO
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def n_requests(self) -> int:
+        return len(self.tenant)
+
+    @property
+    def completed(self) -> int:
+        return int(np.sum(self.status == DONE))
+
+    @property
+    def done_mask(self) -> np.ndarray:
+        return self.status == DONE
+
+    @property
+    def latency_ms(self) -> np.ndarray:
+        """End-to-end latency of completed requests (queueing + service)."""
+        m = self.done_mask
+        return self.t_end[m] - self.t_arrive[m]
+
+    @property
+    def wait_ms(self) -> np.ndarray:
+        m = self.done_mask
+        return self.t_start[m] - self.t_arrive[m]
+
+    @property
+    def slowdown(self) -> np.ndarray:
+        """Latency / pure-service ratio per completed request (>= 1)."""
+        m = self.done_mask
+        return (self.t_end[m] - self.t_arrive[m]) / self.service_ms[m]
+
+    def percentile(self, q: float) -> float:
+        lat = self.latency_ms
+        return float(np.percentile(lat, q)) if len(lat) else float("nan")
+
+    @property
+    def p50_ms(self) -> float:
+        return self.percentile(50.0)
+
+    @property
+    def p99_ms(self) -> float:
+        return self.percentile(99.0)
+
+    @property
+    def makespan_ms(self) -> float:
+        ends = self.t_end[self.done_mask]
+        if not len(ends):
+            return 0.0
+        return float(ends.max() - self.t_arrive.min())
+
+    @property
+    def sustained_rps(self) -> float:
+        mk = self.makespan_ms
+        return 1e3 * self.completed / mk if mk > 0.0 else 0.0
+
+    # -- SLO accounting ----------------------------------------------------
+    def _slo_for(self, tenant: int) -> SLO:
+        return self.slos.get(tenant, self.default_slo)
+
+    def slo_report(self) -> dict:
+        """Per-tenant p99 / completion rate vs target, aggregated.
+
+        A tenant violates when its observed p99 exceeds its budget or its
+        completion throughput (over the trace span) undershoots its floor.
+        """
+        m = self.done_mask
+        lat = self.t_end[m] - self.t_arrive[m]
+        ten = self.tenant[m]
+        span_s = self.makespan_ms / 1e3
+        order = np.argsort(ten, kind="stable")
+        ten_sorted, lat_sorted = ten[order], lat[order]
+        bounds = np.searchsorted(ten_sorted,
+                                 np.arange(self.n_tenants + 1))
+        p99_violations = throughput_violations = served_tenants = 0
+        for t in range(self.n_tenants):
+            lo, hi = bounds[t], bounds[t + 1]
+            if hi == lo:
+                continue
+            served_tenants += 1
+            slo = self._slo_for(t)
+            if float(np.percentile(lat_sorted[lo:hi], 99.0)) > slo.p99_ms:
+                p99_violations += 1
+            if (slo.throughput_rps > 0.0 and span_s > 0.0
+                    and (hi - lo) / span_s < slo.throughput_rps):
+                throughput_violations += 1
+        return {"served_tenants": served_tenants,
+                "p99_violations": p99_violations,
+                "throughput_violations": throughput_violations,
+                "shed": self.shed}
+
+    def tenant_metrics(self, tenant: int) -> dict:
+        """One tenant's telemetry in the canonical
+        :data:`~repro.serve.engine.METRIC_KEYS` shape."""
+        mine = self.tenant == tenant
+        done = mine & self.done_mask
+        running = mine & (self.status == RUNNING)
+        queued = mine & (self.status == PENDING)
+        steps = int(self.max_new[done].sum())
+        svc = self.service_ms[done]
+        per_step = (svc / self.max_new[done]) if len(svc) else np.array([])
+        return {
+            "steps": steps,
+            "active": int(running.sum()),
+            "queue_depth": int(queued.sum()),
+            "admitted": int(mine.sum()) - int((self.status[mine] == SHED).sum()),
+            "completed": int(done.sum()),
+            "deferred": 0,      # deferral is fleet-global (KV budget)
+            "tokens_out": steps,
+            "last_step_ms": float(per_step[-1]) if len(per_step) else 0.0,
+            "mean_step_ms": float(per_step.mean()) if len(per_step) else 0.0,
+        }
+
+    def summary(self) -> str:
+        slo = self.slo_report()
+        rows = [
+            f"fleet[{self.policy}] requests={self.n_requests} "
+            f"completed={self.completed} shed={self.shed} "
+            f"deferred={self.deferred}",
+            f"  latency p50={self.p50_ms:.1f}ms p99={self.p99_ms:.1f}ms "
+            f"sustained={self.sustained_rps:.1f} req/s",
+            f"  slo: {slo['p99_violations']}/{slo['served_tenants']} "
+            f"tenants over p99 budget, "
+            f"{slo['throughput_violations']} under throughput floor",
+            f"  reschedules={len(self.reschedules)}",
+        ]
+        return "\n".join(rows)
+
+
+class FleetGateway:
+    """Virtual-time multiplexer of an open-loop fleet over a plan pool.
+
+    Deterministic by construction: no RNG, no wall clock — identical
+    ``(pool, config, trace, contention_events)`` replay identically.
+    """
+
+    def __init__(self, pool: Sequence[PoolPlan], n_tenants: int,
+                 cfg: FleetConfig = FleetConfig(),
+                 slos: Mapping[int, SLO] | None = None,
+                 capacity_hint: int = 0):
+        if not pool:
+            raise ValueError("pool must hold at least one PoolPlan")
+        classes = pool[0].classes
+        for pp in pool:
+            if pp.classes != classes:
+                raise ValueError(
+                    f"pool plans serve different tenant-class sets: "
+                    f"{pp.classes} != {classes}")
+        if n_tenants < 1:
+            raise ValueError("n_tenants must be >= 1")
+        self.pool = list(pool)
+        self.classes = classes
+        self.n_tenants = n_tenants
+        self.cfg = cfg
+        self.controller = AdmissionController(
+            budget_bytes=cfg.memory_budget_bytes,
+            default_slo=cfg.default_slo, slos=slos,
+            max_queue_per_tenant=cfg.max_queue_per_tenant,
+            shed_factor=cfg.shed_factor)
+        self.monitors = [
+            SlowdownMonitor(threshold=cfg.slowdown_threshold,
+                            patience=cfg.patience, cooldown=cfg.cooldown,
+                            warmup=cfg.warmup)
+            for _ in pool]
+        self.reschedules: list[FleetRescheduleEvent] = []
+        # runtime state
+        self._rec = _Records(capacity_hint)
+        self._now = 0.0
+        self._seq = 0
+        self._heap: list[tuple[float, int, int]] = []      # (end, seq, req)
+        self._free_slots = [pp.slots for pp in self.pool]
+        #: per-plan FIFO of queued request indices (drained into slots).
+        self._plan_q: list[deque[int]] = [deque() for _ in self.pool]
+        #: per-plan outstanding predicted work (ms) — the routing signal.
+        self._load_ms = np.zeros(len(self.pool))
+        #: per-tenant queued-request depth (admission signal).
+        self._tenant_depth = np.zeros(n_tenants, np.int32)
+        #: asyncio futures resolved at completion (serve_async only).
+        self._futures: dict[int, asyncio.Future] = {}
+
+    # -- class mapping -----------------------------------------------------
+    def class_of(self, tenant: int) -> int:
+        return tenant % len(self.classes)
+
+    @property
+    def now_ms(self) -> float:
+        return self._now
+
+    # -- arrivals ----------------------------------------------------------
+    def submit(self, t_ms: float, tenant: int, max_new: int) -> int:
+        """One open-loop arrival at virtual time ``t_ms``.
+
+        Returns the request index, or -1 when the request was shed.
+        Arrival times must be non-decreasing (the trace invariant).
+        """
+        self.advance(t_ms)
+        if not 0 <= tenant < self.n_tenants:
+            raise ValueError(f"tenant {tenant} out of range")
+        cls = self.class_of(tenant)
+        waits = [self._load_ms[p] / self.pool[p].slots
+                 for p in range(len(self.pool))]
+        if self.controller.should_shed(
+                tenant, int(self._tenant_depth[tenant]), min(waits)):
+            i = self._rec.append(tenant, cls, t_ms, max_new)
+            self._rec.status[i] = SHED
+            self._resolve_future(i)
+            return -1
+        if self.cfg.policy == "round_robin":
+            p = tenant % len(self.pool)
+        else:
+            services = [pp.service_ms(cls, max_new) for pp in self.pool]
+            p = self.controller.select_plan(waits, services)
+        i = self._rec.append(tenant, cls, t_ms, max_new)
+        self._rec.plan[i] = p
+        est = self.pool[p].service_ms(cls, max_new)
+        self._rec.est_ms[i] = est
+        self._load_ms[p] += est
+        self._tenant_depth[tenant] += 1
+        self._plan_q[p].append(i)
+        self._try_start(p)
+        return i
+
+    # -- event machine -----------------------------------------------------
+    def advance(self, t_ms: float) -> None:
+        """Process completions up to virtual time ``t_ms``."""
+        if t_ms < self._now - 1e-9:
+            raise ValueError(
+                f"time went backwards: {t_ms} < {self._now}")
+        heap = self._heap
+        while heap and heap[0][0] <= t_ms:
+            end, _, i = heapq.heappop(heap)
+            self._now = max(self._now, end)
+            self._complete(i, end)
+        self._now = max(self._now, t_ms)
+
+    def drain(self) -> None:
+        """Run the clock forward until every admitted request completed."""
+        while self._heap:
+            end, _, i = heapq.heappop(self._heap)
+            self._now = max(self._now, end)
+            self._complete(i, end)
+
+    def _try_start(self, p: int) -> None:
+        pp = self.pool[p]
+        q = self._plan_q[p]
+        while q and self._free_slots[p] > 0:
+            i = q[0]
+            cls = int(self._rec.cls[i])
+            if not self.controller.try_acquire(float(pp.kv_bytes[cls])):
+                break                         # deferred: retried on frees
+            q.popleft()
+            self._free_slots[p] -= 1
+            self._tenant_depth[self._rec.tenant[i]] -= 1
+            service = pp.service_ms(cls, int(self._rec.max_new[i]))
+            start = max(self._now, float(self._rec.t_arrive[i]))
+            self._rec.t_start[i] = start
+            self._rec.service_ms[i] = service
+            self._rec.t_end[i] = start + service
+            self._rec.status[i] = RUNNING
+            self._seq += 1
+            heapq.heappush(self._heap, (start + service, self._seq, i))
+
+    def _complete(self, i: int, end: float) -> None:
+        p = int(self._rec.plan[i])
+        cls = int(self._rec.cls[i])
+        pp = self.pool[p]
+        self._rec.status[i] = DONE
+        self._free_slots[p] += 1
+        self._load_ms[p] = max(0.0, self._load_ms[p] - self._rec.est_ms[i])
+        self.controller.release(float(pp.kv_bytes[cls]))
+        self._resolve_future(i)
+        # §4.4: observed per-step latency vs the steady-state floor.
+        observed = self._rec.service_ms[i] / max(1, self._rec.max_new[i])
+        floor = float(pp.base_step_ms[cls])
+        if self.monitors[p].observe(observed, floor):
+            self._reschedule(p, end)
+        # a freed slot (or KV budget) may unblock any plan's queue.
+        for other in range(len(self.pool)):
+            if self._plan_q[other] and self._free_slots[other] > 0:
+                self._try_start(other)
+
+    def _reschedule(self, p: int, t_ms: float) -> None:
+        pp = self.pool[p]
+        factor = quantize_severity(self.monitors[p].ratio)
+        changed, old_obj, new_obj = pp.reschedule(
+            factor, objective=self.cfg.objective,
+            max_transitions=self.cfg.max_transitions,
+            budget_s=self.cfg.reschedule_budget_s)
+        self.reschedules.append(FleetRescheduleEvent(
+            t_ms, pp.name, factor, old_obj, new_obj, changed))
+        self.monitors[p].reset()
+
+    # -- external contention (tests / benchmarks / replay harnesses) ------
+    def set_contention(self, plan: int, factor: float) -> None:
+        """Inject external memory contention on one pool plan: all service
+        from now on is priced under ``ScaledContentionModel(base, factor)``
+        — the knob replay harnesses use to trigger the §4.4 loop."""
+        self.pool[plan].apply_factor(factor)
+
+    # -- replay ------------------------------------------------------------
+    def replay(self, trace: ArrivalTrace,
+               contention_events: Sequence[tuple[float, int, float]] = (),
+               drain: bool = True) -> FleetReport:
+        """Replay an arrival trace through the loop (virtual time).
+
+        ``contention_events`` is a sorted sequence of ``(t_ms, plan_idx,
+        factor)`` external-severity switches merged into the arrival
+        stream.  With ``drain`` the clock runs until the last admitted
+        request completes.
+        """
+        if trace.n_tenants > self.n_tenants:
+            raise ValueError(
+                f"trace has {trace.n_tenants} tenants, gateway admits "
+                f"{self.n_tenants}")
+        events = sorted(contention_events)
+        e = 0
+        t_arr, tenants, mnew = trace.t_ms, trace.tenant, trace.max_new
+        for k in range(len(trace)):
+            t = float(t_arr[k])
+            while e < len(events) and events[e][0] <= t:
+                self.advance(events[e][0])
+                self.set_contention(events[e][1], events[e][2])
+                e += 1
+            self.submit(t, int(tenants[k]), int(mnew[k]))
+        for t_ev, plan, factor in events[e:]:
+            self.advance(t_ev)
+            self.set_contention(plan, factor)
+        if drain:
+            self.drain()
+        return self.report()
+
+    def report(self) -> FleetReport:
+        r = self._rec
+        n = r.n
+        return FleetReport(
+            n_tenants=self.n_tenants, classes=self.classes,
+            policy=self.cfg.policy,
+            tenant=r.tenant[:n].copy(), cls=r.cls[:n].copy(),
+            plan=r.plan[:n].copy(), t_arrive=r.t_arrive[:n].copy(),
+            t_start=r.t_start[:n].copy(), t_end=r.t_end[:n].copy(),
+            service_ms=r.service_ms[:n].copy(),
+            max_new=r.max_new[:n].copy(), status=r.status[:n].copy(),
+            reschedules=list(self.reschedules),
+            shed=self.controller.shed, deferred=self.controller.deferred,
+            slos=dict(self.controller.slos),
+            default_slo=self.controller.default_slo)
+
+    def metrics(self) -> dict:
+        """Live telemetry in the gateway's ``metrics()`` shape: per-tenant
+        rows under ``"tenants"`` (canonical :data:`~repro.serve.engine.
+        METRIC_KEYS`), fleet aggregates on top."""
+        rep = self.report()
+        return {
+            "steps": int(rep.max_new[rep.done_mask].sum()),
+            "kv_bytes_in_use": self.controller.kv_bytes_in_use,
+            "deferred_admissions": self.controller.deferred,
+            "reschedules": len(self.reschedules),
+            "tenants": {int(t): rep.tenant_metrics(int(t))
+                        for t in np.unique(rep.tenant)},
+        }
+
+    # -- asyncio front-end -------------------------------------------------
+    def _resolve_future(self, i: int) -> None:
+        fut = self._futures.pop(i, None)
+        if fut is not None and not fut.done():
+            fut.set_result(self._rec.status[i] == DONE)
+
+    async def submit_async(self, tenant: int, max_new: int,
+                           t_ms: float | None = None) -> bool:
+        """Submit one request and await its completion (False = shed)."""
+        loop = asyncio.get_running_loop()
+        fut: asyncio.Future = loop.create_future()
+        t = self._now if t_ms is None else t_ms
+        # register before submitting: shed resolves the future inline.
+        self._futures[self._rec.n] = fut
+        i = self.submit(t, tenant, max_new)
+        if i < 0:
+            return await fut
+        return await fut
+
+
+async def serve_async(gateway: FleetGateway, trace: ArrivalTrace,
+                      time_scale: float = 0.0) -> FleetReport:
+    """Drive the fleet loop as an asyncio service.
+
+    Arrivals are paced in wall time (``sleep(gap_ms * time_scale / 1e3)``;
+    0 replays as fast as the event loop can schedule) and each submission
+    is a task awaiting its own completion — the front-end shape a network
+    server would use, over the same deterministic virtual-time core.
+    """
+    async def one(t: float, tenant: int, max_new: int):
+        return await gateway.submit_async(tenant, max_new, t_ms=t)
+
+    tasks = []
+    prev = float(trace.t_ms[0]) if len(trace) else 0.0
+    for k in range(len(trace)):
+        t = float(trace.t_ms[k])
+        if time_scale > 0.0 and t > prev:
+            await asyncio.sleep((t - prev) * time_scale / 1e3)
+        prev = t
+        tasks.append(asyncio.ensure_future(
+            one(t, int(trace.tenant[k]), int(trace.max_new[k]))))
+        # yield to let completions resolve between submissions.
+        await asyncio.sleep(0)
+    gateway.drain()
+    if tasks:
+        await asyncio.gather(*tasks)
+    return gateway.report()

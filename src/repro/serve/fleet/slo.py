@@ -1,0 +1,188 @@
+"""Per-tenant SLO targets driving admission, shedding and plan selection.
+
+MoCA (PAPERS.md) frames multi-tenant accelerator runtimes around per-tenant
+QoS targets that *drive* resource decisions rather than merely being
+reported afterwards.  This module is that control surface for the fleet
+loop:
+
+* :class:`SLO` — a tenant's targets: tail-latency budget (``p99_ms``) and
+  optional throughput floor (``throughput_rps``), plus a ``priority``
+  weight used when load must be shed.
+* :class:`AdmissionController` — the shared budget + SLO gate.  It owns
+  the fleet-wide KV-memory budget (the same accounting as
+  ``MultiTenantGateway``'s ``memory_budget_bytes``), decides
+  admit/defer/shed per arriving request, and performs SLO-aware plan
+  selection (route each request to the pool plan minimizing its predicted
+  finish time against the tenant's deadline).  :meth:`engine_gate` adapts
+  the controller to the existing :class:`~repro.serve.engine.ServingEngine`
+  ``admission_gate`` hook, so a real engine and the fleet's virtual-time
+  loop enforce one budget through one object.
+
+Decision semantics (one request):
+
+1. **shed** — refused outright, never queued: the tenant's queue is at its
+   bound, or the predicted queueing delay already blows the latency budget
+   by ``shed_factor``.  Open-loop arrivals cannot be back-pressured, so
+   shedding early protects admitted requests instead of letting everyone
+   time out (a rejected request is an SLO outcome too — it is counted).
+2. **admit** — enqueued; a KV slot is *acquired* only when service starts
+   (``try_acquire``/``release``), so queued requests never pin memory.
+3. **defer** — an admitted request whose service start is blocked on the
+   KV budget; it stays queued and is retried as budget frees.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping, Sequence
+
+
+@dataclass(frozen=True)
+class SLO:
+    """One tenant's service-level objectives."""
+
+    #: end-to-end (queueing + service) tail-latency budget.
+    p99_ms: float
+    #: minimum sustained completion rate the tenant is promised; 0 = best
+    #: effort.  Checked post-hoc per replay (see FleetReport.slo_report).
+    throughput_rps: float = 0.0
+    #: relative weight when shedding: lower priority sheds first.
+    priority: float = 1.0
+
+    def __post_init__(self):
+        if self.p99_ms <= 0.0:
+            raise ValueError("p99_ms must be > 0")
+        if self.throughput_rps < 0.0 or self.priority <= 0.0:
+            raise ValueError("throughput_rps must be >= 0 and priority > 0")
+
+    def to_dict(self) -> dict:
+        return {"p99_ms": self.p99_ms,
+                "throughput_rps": self.throughput_rps,
+                "priority": self.priority}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SLO":
+        return cls(p99_ms=d["p99_ms"],
+                   throughput_rps=d.get("throughput_rps", 0.0),
+                   priority=d.get("priority", 1.0))
+
+
+def parse_slo(spec: str) -> SLO:
+    """CLI helper: ``p99=400[,rps=5][,priority=2]`` -> :class:`SLO`."""
+    keys = {"p99": "p99_ms", "p99_ms": "p99_ms",
+            "rps": "throughput_rps", "throughput_rps": "throughput_rps",
+            "priority": "priority"}
+    kwargs: dict[str, float] = {}
+    for item in filter(None, spec.split(",")):
+        key, _, val = item.partition("=")
+        if key not in keys:
+            raise ValueError(f"unknown SLO field {key!r} in {spec!r} "
+                             f"(one of {', '.join(sorted(set(keys)))})")
+        kwargs[keys[key]] = float(val)
+    if "p99_ms" not in kwargs:
+        raise ValueError(f"SLO spec {spec!r} must set p99=<ms>")
+    return SLO(**kwargs)
+
+
+class AdmissionController:
+    """Shared KV budget + SLO policy for a fleet of tenants.
+
+    ``slos`` maps tenant id (or the special key ``"default"``) to its
+    :class:`SLO`; tenants without an entry use ``default_slo``.
+    """
+
+    def __init__(self, budget_bytes: float | None = None,
+                 default_slo: SLO = SLO(p99_ms=1000.0),
+                 slos: Mapping[int, SLO] | None = None,
+                 max_queue_per_tenant: int = 64,
+                 shed_factor: float = 4.0):
+        if max_queue_per_tenant < 1:
+            raise ValueError("max_queue_per_tenant must be >= 1")
+        if shed_factor <= 0.0:
+            raise ValueError("shed_factor must be > 0")
+        self.budget_bytes = budget_bytes
+        self.default_slo = default_slo
+        self.slos = dict(slos or {})
+        self.max_queue_per_tenant = max_queue_per_tenant
+        self.shed_factor = shed_factor
+        self.kv_bytes_in_use = 0.0
+        # counters (telemetry)
+        self.shed = 0
+        self.deferred = 0
+
+    # -- SLO lookup --------------------------------------------------------
+    def slo_for(self, tenant: int) -> SLO:
+        return self.slos.get(tenant, self.default_slo)
+
+    def deadline_ms(self, tenant: int, arrival_ms: float) -> float:
+        return arrival_ms + self.slo_for(tenant).p99_ms
+
+    # -- KV budget (same accounting as the gateway's memory_budget_bytes) --
+    def kv_admit(self, nbytes: float) -> bool:
+        if self.budget_bytes is None:
+            return True
+        return self.kv_bytes_in_use + nbytes <= self.budget_bytes
+
+    def try_acquire(self, nbytes: float) -> bool:
+        if not self.kv_admit(nbytes):
+            self.deferred += 1
+            return False
+        self.kv_bytes_in_use += nbytes
+        return True
+
+    def release(self, nbytes: float) -> None:
+        self.kv_bytes_in_use = max(0.0, self.kv_bytes_in_use - nbytes)
+
+    def engine_gate(self, bytes_per_slot: float) -> Callable[[object], bool]:
+        """Adapter for the existing ``ServingEngine(admission_gate=...)``
+        hook: the returned callable prices one slot admission against this
+        controller's shared budget (deferral keeps the engine's FIFO)."""
+        def gate(_req: object) -> bool:
+            ok = self.kv_admit(bytes_per_slot)
+            if not ok:
+                self.deferred += 1
+            return ok
+        return gate
+
+    # -- admission / shedding ---------------------------------------------
+    def should_shed(self, tenant: int, queue_depth: int,
+                    est_wait_ms: float) -> bool:
+        """Refuse an arriving request outright (never queued)?
+
+        Sheds when the tenant's queue is at its bound or predicted
+        queueing alone exceeds ``shed_factor / priority`` times the
+        latency budget — higher-priority tenants tolerate deeper backlog
+        before shedding.
+        """
+        if queue_depth >= self.max_queue_per_tenant:
+            self.shed += 1
+            return True
+        slo = self.slo_for(tenant)
+        if est_wait_ms > self.shed_factor * slo.priority * slo.p99_ms:
+            self.shed += 1
+            return True
+        return False
+
+    # -- plan selection ----------------------------------------------------
+    def select_plan(self, est_wait_ms: Sequence[float],
+                    service_ms: Sequence[float]) -> int:
+        """SLO-aware routing: earliest predicted finish over the pool.
+
+        ``est_wait_ms[p]`` is plan p's current queueing estimate and
+        ``service_ms[p]`` this request's predicted service time there
+        (plans are heterogeneous: the same tenant class runs at different
+        speeds on different SoC plans).  Minimizing predicted finish is
+        what makes the SLO policy beat static round-robin on tail latency:
+        it respects both instantaneous load *and* plan affinity.
+        """
+        best, best_cost = 0, float("inf")
+        for p, (w, s) in enumerate(zip(est_wait_ms, service_ms)):
+            cost = w + s
+            if cost < best_cost:
+                best, best_cost = p, cost
+        return best
+
+    # -- telemetry ---------------------------------------------------------
+    def metrics(self) -> dict:
+        return {"kv_bytes_in_use": self.kv_bytes_in_use,
+                "budget_bytes": self.budget_bytes,
+                "shed": self.shed, "deferred": self.deferred}

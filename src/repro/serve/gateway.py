@@ -366,7 +366,7 @@ class MultiTenantGateway:
                 active[name] = 0
                 continue
             active[name] = eng.step()
-            obs = (observed_ms or {}).get(name, eng.metrics.last_step_ms)
+            obs = (observed_ms or {}).get(name, eng.counters.last_step_ms)
             if active[name] == 0 or obs <= 0.0:
                 continue
             floor = self._floor_ms.get(name)
@@ -388,6 +388,20 @@ class MultiTenantGateway:
         while self.has_work and self.total_steps < max_steps:
             self.step()
         return {n: e.completed for n, e in self.engines.items()}
+
+    def metrics(self) -> dict:
+        """Telemetry snapshot: one ``tenants`` row per engine in the
+        canonical :data:`~repro.serve.engine.METRIC_KEYS` shape plus
+        gateway-level aggregates — the same format the fleet loop
+        (:mod:`repro.serve.fleet`) consumes and re-emits."""
+        tenants = {n: e.metrics() for n, e in self.engines.items()}
+        return {
+            "steps": self.total_steps,
+            "kv_bytes_in_use": self.kv_bytes_in_use,
+            "deferred_admissions": self.deferred_admissions,
+            "reschedules": len(self.reschedules),
+            "tenants": tenants,
+        }
 
     # ---- dynamic loop -------------------------------------------------
     def _reschedule(self, tenants: tuple[str, ...]) -> bool:

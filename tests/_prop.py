@@ -360,6 +360,28 @@ def search_problem_from_seed(seed: int):
             [w.arrival_ms for w in wls])
 
 
+def trace_from_seed(seed: int):
+    """One seeded arrival trace covering every generator kind — the shared
+    scenario builder behind :func:`arrival_traces`."""
+    from repro.serve.fleet.traffic import (bursty_trace, diurnal_trace,
+                                           poisson_trace)
+
+    rng = _random.Random(seed)
+    kind = rng.choice(["poisson", "bursty", "diurnal"])
+    n = rng.choice([16, 100, 400])
+    tenants = rng.choice([1, 7, 50])
+    if kind == "poisson":
+        return poisson_trace(rng.choice([5.0, 200.0]), n, tenants,
+                             seed=seed, skew=rng.choice([0.0, 1.0]))
+    if kind == "bursty":
+        return bursty_trace(rng.choice([10.0, 100.0]),
+                            rng.choice([200.0, 2000.0]), n, tenants,
+                            seed=seed, mean_calm_s=rng.choice([2.0, 20.0]),
+                            mean_burst_s=rng.choice([0.5, 4.0]))
+    return diurnal_trace(rng.choice([50.0, 500.0]), n, tenants, seed=seed,
+                         day_s=rng.choice([3600.0, 86400.0]))
+
+
 if HAVE_HYPOTHESIS:
     def problem_specs():
         """Strategy emitting lowered ProblemSpec instances directly."""
@@ -371,6 +393,12 @@ if HAVE_HYPOTHESIS:
         depends_on, arrivals) tuples for the device-resident search."""
         return st.builds(search_problem_from_seed,
                          st.integers(min_value=0, max_value=10_000_000))
+
+    def arrival_traces():
+        """Strategy emitting seeded fleet ArrivalTrace instances across
+        every generator kind (poisson / bursty / diurnal)."""
+        return st.builds(trace_from_seed,
+                         st.integers(min_value=0, max_value=10_000_000))
 else:
     def problem_specs():
         return _Strategy([spec_from_seed(s) for s in (0, 1, 2, 3, 5, 8)])
@@ -378,3 +406,6 @@ else:
     def search_problems():
         return _Strategy([search_problem_from_seed(s)
                           for s in (0, 1, 2, 3, 5, 8)])
+
+    def arrival_traces():
+        return _Strategy([trace_from_seed(s) for s in (0, 1, 2, 3, 5, 8)])

@@ -366,3 +366,89 @@ class TestCompareErrorRows:
             assert plan.objective <= base + 1e-9
         finally:
             registry._BASELINES.pop("everything-fastest")
+
+
+# ---------------------------------------------------------------------------
+# plan-cache hardening: LRU semantics, truncation tolerance, sharded store
+# ---------------------------------------------------------------------------
+
+class TestPlanCacheHardening:
+    def _requests(self, sched, n):
+        """n distinct problems (different iteration counts)."""
+        return [small_request(sched, iterations=[i + 1, 1])
+                for i in range(n)]
+
+    def test_hit_refreshes_lru_recency(self):
+        sched = small_scheduler(cache=PlanCache(max_entries=2))
+        r1, r2, r3 = self._requests(sched, 3)
+        sched.resolve(r1)
+        sched.resolve(r2)
+        sched.resolve(r1)                     # refresh: r2 is now oldest
+        sched.resolve(r3)                     # evicts r2, not r1
+        solves = sched.solves
+        sched.resolve(r1)                     # still cached
+        assert sched.solves == solves
+        sched.resolve(r2)                     # evicted: re-solved
+        assert sched.solves == solves + 1
+
+    def test_truncated_disk_artifact_degrades_to_miss(self, tmp_path):
+        s1 = small_scheduler(cache=PlanCache(tmp_path))
+        s1.resolve(small_request(s1))
+        cache_file = next(tmp_path.glob("plan-*.json"))
+        blob = cache_file.read_text()
+        cache_file.write_text(blob[:len(blob) // 2])   # writer died mid-save
+        s2 = small_scheduler(cache=PlanCache(tmp_path))
+        plan = s2.resolve(small_request(s2))           # re-solves, no crash
+        assert s2.solves == 1 and plan.result.makespan > 0
+
+    def test_wrong_hash_disk_artifact_degrades_to_miss(self, tmp_path):
+        """A decodable artifact stored under the wrong name is ignored."""
+        s1 = small_scheduler(cache=PlanCache(tmp_path))
+        s1.resolve(small_request(s1))
+        src = next(tmp_path.glob("plan-*.json"))
+        other = small_request(s1, iterations=[5, 1])
+        src.rename(tmp_path / f"plan-{other.request_hash()[:16]}.json")
+        s2 = small_scheduler(cache=PlanCache(tmp_path))
+        s2.resolve(other)
+        assert s2.solves == 1                          # mismatch -> miss
+
+
+class TestShardedPlanCache:
+    def test_layout_and_cross_instance_cold_hit(self, tmp_path):
+        from repro.core import ShardedPlanCache
+        s1 = small_scheduler(cache=ShardedPlanCache(tmp_path))
+        p1 = s1.resolve(small_request(s1))
+        path = s1.cache.path_for(p1.request_hash)
+        assert path.exists()
+        assert path.parent.name == p1.request_hash[:2]   # hash-prefix shard
+        # a fresh scheduler over the same root boots without solving
+        s2 = small_scheduler(cache=ShardedPlanCache(tmp_path))
+        p2 = s2.resolve(small_request(s2))
+        assert s2.solves == 0 and s2.cache.hits == 1
+        assert p2.assignments == p1.assignments
+
+    def test_disk_eviction_bounds_every_shard(self, tmp_path):
+        from repro.core import ShardedPlanCache
+        cache = ShardedPlanCache(tmp_path, shard_chars=1,
+                                 max_disk_entries=16)    # budget 1/shard
+        sched = small_scheduler(cache=cache)
+        for i in range(4):
+            sched.resolve(small_request(sched, iterations=[i + 1, 1]))
+        budget = 1
+        for shard in tmp_path.iterdir():
+            assert len(list(shard.glob("plan-*.json"))) <= budget
+        assert cache.disk_entries() <= 4
+
+    def test_corrupt_shard_entry_degrades_to_miss(self, tmp_path):
+        from repro.core import ShardedPlanCache
+        s1 = small_scheduler(cache=ShardedPlanCache(tmp_path))
+        p1 = s1.resolve(small_request(s1))
+        s1.cache.path_for(p1.request_hash).write_text("{truncated")
+        s2 = small_scheduler(cache=ShardedPlanCache(tmp_path))
+        s2.resolve(small_request(s2))
+        assert s2.solves == 1                  # corrupt entry re-solved
+
+    def test_rejects_bad_shard_chars(self, tmp_path):
+        from repro.core import ShardedPlanCache
+        with pytest.raises(ValueError, match="shard_chars"):
+            ShardedPlanCache(tmp_path, shard_chars=0)

@@ -1,0 +1,358 @@
+"""Fleet serving subsystem: trace generators, SLO admission, the
+virtual-time gateway loop, §4.4 under bursty arrivals, and the sharded
+plan-cache cold start."""
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.accelerators import tpu_pod_split
+from repro.core.plan import ShardedPlanCache
+from repro.serve.engine import METRIC_KEYS
+from repro.serve.fleet import (SLO, AdmissionController, ArrivalTrace,
+                               FleetConfig, FleetGateway, build_pool,
+                               bursty_trace, diurnal_trace, parse_slo,
+                               parse_trace_spec, poisson_trace, serve_async)
+from repro.serve.gateway import GatewayConfig, TenantSpec
+
+from _prop import arrival_traces, examples, given, settings
+
+STABLE = configs.get("stablelm-1.6b")
+LLAMA = configs.get("llama3.2-3b")
+
+
+def _specs():
+    # full-size configs: the fleet loop prices service from the solved
+    # schedule and never instantiates the models.
+    return [TenantSpec("stable", STABLE, max_slots=2, capacity=256,
+                       prompt_len=64, max_new=16),
+            TenantSpec("llama", LLAMA, max_slots=2, capacity=256,
+                       prompt_len=64, max_new=16)]
+
+
+@pytest.fixture(scope="module")
+def pool():
+    gcfg = GatewayConfig(max_transitions=1, body_groups=1)
+    plats = [tpu_pod_split(1, 3, name="p13"),
+             tpu_pod_split(2, 2, name="p22")]
+    return build_pool(_specs(), plats, gcfg, slots=4, deadline_s=5.0)
+
+
+# ---------------------------------------------------------------------------
+# traffic
+# ---------------------------------------------------------------------------
+
+class TestTraces:
+    def test_bit_deterministic_per_seed(self):
+        a = poisson_trace(100.0, 300, 20, seed=3, skew=1.0)
+        b = poisson_trace(100.0, 300, 20, seed=3, skew=1.0)
+        for col in ("t_ms", "tenant", "prompt_len", "max_new"):
+            assert np.array_equal(getattr(a, col), getattr(b, col))
+        c = poisson_trace(100.0, 300, 20, seed=4, skew=1.0)
+        assert not np.array_equal(a.t_ms, c.t_ms)
+
+    def test_json_round_trip_is_byte_stable(self):
+        tr = bursty_trace(50.0, 500.0, 200, 10, seed=9)
+        blob = tr.to_json()
+        again = ArrivalTrace.from_json(blob)
+        assert again.to_json() == blob
+        assert again.trace_hash() == tr.trace_hash()
+
+    def test_save_load(self, tmp_path):
+        tr = diurnal_trace(200.0, 150, 30, seed=2, day_s=60.0)
+        path = tr.save(tmp_path / "trace.json")
+        again = ArrivalTrace.load(path)
+        assert np.array_equal(again.t_ms, tr.t_ms)
+        assert again.params == tr.params
+
+    def test_bursty_is_burstier_than_poisson(self):
+        po = poisson_trace(100.0, 2000, 10, seed=0)
+        bu = bursty_trace(20.0, 2000.0, 2000, 10, seed=0,
+                          mean_calm_s=10.0, mean_burst_s=0.5)
+        assert bu.burstiness() > po.burstiness() > 0.5
+
+    def test_mean_rate_tracks_parameter(self):
+        tr = poisson_trace(250.0, 5000, 10, seed=1)
+        assert tr.mean_rate_rps == pytest.approx(250.0, rel=0.1)
+
+    def test_skew_concentrates_tenants(self):
+        flat = poisson_trace(100.0, 3000, 50, seed=5, skew=0.0)
+        skew = poisson_trace(100.0, 3000, 50, seed=5, skew=2.0)
+        top = lambda t: np.bincount(t.tenant, minlength=50).max()
+        assert top(skew) > 2 * top(flat)
+
+    def test_arrays_are_frozen(self):
+        tr = poisson_trace(10.0, 10, 2, seed=0)
+        with pytest.raises(ValueError):
+            tr.t_ms[0] = -1.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="non-decreasing"):
+            ArrivalTrace("custom", 0, 2, {}, np.array([2.0, 1.0]),
+                         np.zeros(2, np.int32), np.ones(2, np.int32),
+                         np.ones(2, np.int32))
+        with pytest.raises(ValueError, match="tenant"):
+            ArrivalTrace("custom", 0, 2, {}, np.array([1.0, 2.0]),
+                         np.array([0, 5], np.int32), np.ones(2, np.int32),
+                         np.ones(2, np.int32))
+        with pytest.raises(ValueError, match="format"):
+            ArrivalTrace.from_dict({"format": 99})
+
+    def test_parse_trace_spec_generator_and_file(self, tmp_path):
+        tr = parse_trace_spec("poisson:rate=100,n=50,tenants=8,seed=3")
+        assert tr.kind == "poisson" and len(tr) == 50 and tr.seed == 3
+        path = tr.save(tmp_path / "t.json")
+        again = parse_trace_spec(str(path))
+        assert again.trace_hash() == tr.trace_hash()
+
+    def test_parse_trace_spec_errors(self):
+        with pytest.raises(ValueError, match="kind"):
+            parse_trace_spec("weird:rate=1")
+        with pytest.raises(ValueError, match="missing"):
+            parse_trace_spec("bursty:base=10,n=100,tenants=4")
+
+    @settings(max_examples=examples(20))
+    @given(trace=arrival_traces())
+    def test_trace_invariants(self, trace):
+        assert np.all(np.diff(trace.t_ms) >= 0.0)
+        assert trace.t_ms[0] >= 0.0
+        assert trace.tenant.min() >= 0
+        assert trace.tenant.max() < trace.n_tenants
+        assert trace.prompt_len.min() >= 1 and trace.max_new.min() >= 1
+        again = ArrivalTrace.from_json(trace.to_json())
+        assert again.trace_hash() == trace.trace_hash()
+
+
+# ---------------------------------------------------------------------------
+# SLO + admission
+# ---------------------------------------------------------------------------
+
+class TestSLO:
+    def test_parse_slo(self):
+        slo = parse_slo("p99=400,rps=5,priority=2")
+        assert slo == SLO(p99_ms=400.0, throughput_rps=5.0, priority=2.0)
+        assert parse_slo("p99=100") == SLO(p99_ms=100.0)
+        with pytest.raises(ValueError, match="p99"):
+            parse_slo("rps=5")
+        with pytest.raises(ValueError, match="unknown"):
+            parse_slo("p99=100,latency=5")
+
+    def test_slo_validation(self):
+        with pytest.raises(ValueError):
+            SLO(p99_ms=0.0)
+        with pytest.raises(ValueError):
+            SLO(p99_ms=10.0, priority=0.0)
+
+    def test_kv_budget_acquire_release(self):
+        ac = AdmissionController(budget_bytes=100.0)
+        assert ac.try_acquire(60.0) and ac.try_acquire(40.0)
+        assert not ac.try_acquire(1.0)
+        assert ac.deferred == 1
+        ac.release(40.0)
+        assert ac.try_acquire(1.0)
+
+    def test_should_shed_on_queue_bound_and_wait(self):
+        ac = AdmissionController(default_slo=SLO(p99_ms=100.0),
+                                 max_queue_per_tenant=2, shed_factor=2.0)
+        assert not ac.should_shed(0, queue_depth=1, est_wait_ms=10.0)
+        assert ac.should_shed(0, queue_depth=2, est_wait_ms=10.0)
+        assert ac.should_shed(0, queue_depth=0, est_wait_ms=500.0)
+        assert ac.shed == 2
+
+    def test_priority_tolerates_deeper_backlog(self):
+        ac = AdmissionController(
+            default_slo=SLO(p99_ms=100.0),
+            slos={1: SLO(p99_ms=100.0, priority=4.0)}, shed_factor=2.0)
+        assert ac.should_shed(0, 0, est_wait_ms=500.0)       # default sheds
+        assert not ac.should_shed(1, 0, est_wait_ms=500.0)   # priority holds
+
+    def test_select_plan_earliest_finish(self):
+        ac = AdmissionController()
+        assert ac.select_plan([100.0, 0.0], [10.0, 50.0]) == 1
+        assert ac.select_plan([10.0, 0.0], [10.0, 50.0]) == 0
+
+    def test_engine_gate_wires_into_serving_engine(self):
+        import jax
+        from repro.models import build
+        from repro.serve.engine import ServingEngine
+        cfg = STABLE.reduced()
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        ac = AdmissionController(budget_bytes=0.0)    # nothing fits
+        eng = ServingEngine(model, params, max_slots=2, capacity=32,
+                            admission_gate=ac.engine_gate(64.0))
+        eng.submit(np.arange(5), max_new=2)
+        assert eng.step() == 0 and eng.active == 0    # deferred, not lost
+        assert ac.deferred >= 1 and eng.counters.deferred >= 1
+        ac.budget_bytes = None                        # budget lifted
+        eng.run_until_drained()
+        assert len(eng.completed) == 1
+
+
+# ---------------------------------------------------------------------------
+# fleet loop
+# ---------------------------------------------------------------------------
+
+class TestFleetLoop:
+    def test_replay_conserves_requests(self, pool):
+        tr = poisson_trace(300.0, 800, 50, seed=4)
+        gw = FleetGateway(pool, n_tenants=50, capacity_hint=len(tr))
+        rep = gw.replay(tr)
+        assert rep.n_requests == len(tr)
+        assert rep.completed + rep.shed == rep.n_requests
+        assert rep.completed == rep.n_requests       # light load: no shed
+        assert np.all(rep.latency_ms >= 0.0)
+        assert np.all(rep.slowdown >= 1.0 - 1e-9)
+
+    def test_replay_is_deterministic(self, pool):
+        tr = bursty_trace(100.0, 900.0, 600, 40, seed=8)
+        reps = []
+        for _ in range(2):
+            gw = FleetGateway(pool, n_tenants=40, capacity_hint=len(tr))
+            reps.append(gw.replay(tr))
+        assert np.array_equal(reps[0].t_end, reps[1].t_end)
+        assert np.array_equal(reps[0].plan, reps[1].plan)
+
+    def test_telemetry_canonical_shape(self, pool):
+        tr = poisson_trace(200.0, 200, 10, seed=2)
+        gw = FleetGateway(pool, n_tenants=10, capacity_hint=len(tr))
+        gw.replay(tr)
+        m = gw.metrics()
+        assert set(m) >= {"steps", "kv_bytes_in_use",
+                          "deferred_admissions", "reschedules", "tenants"}
+        for row in m["tenants"].values():
+            assert tuple(row) == METRIC_KEYS
+
+    def test_slo_routing_no_worse_than_round_robin_on_p99(self, pool):
+        tr = bursty_trace(150.0, 1200.0, 4000, 200, seed=7)
+        p99 = {}
+        for policy in ("slo", "round_robin"):
+            gw = FleetGateway(pool, n_tenants=200,
+                              cfg=FleetConfig(policy=policy),
+                              capacity_hint=len(tr))
+            p99[policy] = gw.replay(tr).p99_ms
+        assert p99["slo"] <= p99["round_robin"] + 1e-9
+
+    def test_kv_budget_defers_but_completes(self, pool):
+        kv = float(max(pp.kv_bytes.max() for pp in pool))
+        tr = poisson_trace(400.0, 400, 20, seed=6)
+        gw = FleetGateway(
+            pool, n_tenants=20,
+            cfg=FleetConfig(memory_budget_bytes=2.0 * kv),
+            capacity_hint=len(tr))
+        rep = gw.replay(tr)
+        assert rep.deferred > 0                      # budget throttled starts
+        assert rep.completed == rep.n_requests       # but nothing was lost
+
+    def test_overload_sheds_and_conserves(self, pool):
+        tr = poisson_trace(5000.0, 3000, 10, seed=1)
+        gw = FleetGateway(
+            pool, n_tenants=10,
+            cfg=FleetConfig(default_slo=SLO(p99_ms=50.0),
+                            max_queue_per_tenant=8, shed_factor=1.0),
+            capacity_hint=len(tr))
+        rep = gw.replay(tr)
+        assert rep.shed > 0
+        assert rep.completed + rep.shed == rep.n_requests
+        assert rep.slo_report()["shed"] == rep.shed
+
+    def test_time_cannot_go_backwards(self, pool):
+        gw = FleetGateway(pool, n_tenants=4)
+        gw.submit(100.0, 0, 4)
+        with pytest.raises(ValueError, match="backwards"):
+            gw.submit(50.0, 1, 4)
+
+    def test_pool_class_mismatch_rejected(self, pool):
+        with pytest.raises(ValueError, match="n_tenants"):
+            FleetGateway(pool, n_tenants=0)
+
+    def test_async_front_end_matches_replay_counts(self, pool):
+        tr = poisson_trace(500.0, 80, 10, seed=3)
+        gw = FleetGateway(pool, n_tenants=10, capacity_hint=len(tr))
+        rep = asyncio.run(serve_async(gw, tr))
+        assert rep.completed == len(tr)
+        gw2 = FleetGateway(pool, n_tenants=10, capacity_hint=len(tr))
+        rep2 = gw2.replay(tr)
+        assert rep.completed == rep2.completed
+        assert np.array_equal(rep.t_end, rep2.t_end)  # same virtual machine
+
+
+# ---------------------------------------------------------------------------
+# §4.4 under bursty arrivals (satellite)
+# ---------------------------------------------------------------------------
+
+class TestDynamicRescheduling:
+    def test_contention_burst_fires_monitor_and_converges(self, pool):
+        tr = bursty_trace(150.0, 1200.0, 3000, 100, seed=5)
+        mid = float(tr.t_ms[len(tr) // 4])
+        gw = FleetGateway(
+            pool, n_tenants=100,
+            cfg=FleetConfig(default_slo=SLO(p99_ms=10_000.0),
+                            slowdown_threshold=1.3, patience=4,
+                            cooldown=64, warmup=0),
+            capacity_hint=len(tr))
+        rep = gw.replay(tr, contention_events=[(mid, 0, 4.0)])
+        # the monitor fired and the gateway re-solved under the observed
+        # severity (§4.4)
+        assert rep.reschedules
+        ev = rep.reschedules[0]
+        assert ev.plan == pool[0].name
+        assert ev.observed_factor > 1.3
+        # adopt-if-better: the re-solve never replaces the incumbent with
+        # a worse schedule under the same scaled model
+        for e in rep.reschedules:
+            assert e.new_objective <= e.old_objective + 1e-9
+        # no admitted tenant was dropped by the adaptation
+        assert rep.completed + rep.shed == rep.n_requests
+        assert rep.completed == rep.n_requests
+
+    def test_reschedules_at_same_severity_are_plan_cache_hits(self, pool):
+        tr = bursty_trace(150.0, 1200.0, 3000, 100, seed=5)
+        mid = float(tr.t_ms[len(tr) // 4])
+        gw = FleetGateway(
+            pool, n_tenants=100,
+            cfg=FleetConfig(default_slo=SLO(p99_ms=10_000.0),
+                            slowdown_threshold=1.3, patience=4,
+                            cooldown=64, warmup=0),
+            capacity_hint=len(tr))
+        sched = pool[0].scheduler
+        hits_before, solves_before = sched.cache.hits, sched.solves
+        rep = gw.replay(tr, contention_events=[(mid, 0, 4.0)])
+        assert len(rep.reschedules) >= 2
+        # repeated fires at the same quantized severity re-solve at most
+        # once; the rest route through the plan cache
+        assert sched.solves - solves_before <= 2
+        assert sched.cache.hits > hits_before
+
+    def test_clearing_contention_restores_steady_state(self, pool):
+        pp = pool[1]
+        base = pp.step_ms.copy()
+        pp.apply_factor(3.0)
+        assert np.allclose(pp.step_ms, 3.0 * base)
+        pp.apply_factor(1.0)
+        assert np.allclose(pp.step_ms, base)
+
+
+# ---------------------------------------------------------------------------
+# sharded plan cache cold start
+# ---------------------------------------------------------------------------
+
+class TestColdStart:
+    def test_pool_boots_from_sharded_cache_with_zero_solves(self, tmp_path):
+        gcfg = GatewayConfig(max_transitions=1, body_groups=1)
+        plats = [tpu_pod_split(1, 3, name="p13"),
+                 tpu_pod_split(2, 2, name="p22")]
+        cache1 = ShardedPlanCache(tmp_path / "plans")
+        pool1 = build_pool(_specs(), plats, gcfg, cache1, slots=4,
+                           deadline_s=5.0)
+        assert sum(pp.scheduler.solves for pp in pool1) == len(plats)
+        assert cache1.disk_entries() == len(plats)
+        # fresh cache objects + fresh schedulers: pure disk loads
+        cache2 = ShardedPlanCache(tmp_path / "plans")
+        pool2 = build_pool(_specs(), plats, gcfg, cache2, slots=4,
+                           deadline_s=5.0)
+        assert sum(pp.scheduler.solves for pp in pool2) == 0
+        for a, b in zip(pool1, pool2):
+            assert np.allclose(a.step_ms, b.step_ms)

@@ -257,11 +257,34 @@ class TestEngineRegression:
         assert eng.has_work
         eng.run_until_drained()
         assert not eng.has_work
-        assert eng.metrics.admitted == 1
-        assert eng.metrics.steps == eng.steps > 0
-        assert eng.metrics.tokens_out == 3
-        assert eng.metrics.last_step_ms > 0.0
-        assert eng.metrics.mean_step_ms > 0.0
+        assert eng.counters.admitted == 1
+        assert eng.counters.steps == eng.steps > 0
+        assert eng.counters.tokens_out == 3
+        assert eng.counters.last_step_ms > 0.0
+        assert eng.counters.mean_step_ms > 0.0
+
+    def test_metrics_dict_is_canonical_shape(self):
+        from repro.serve.engine import METRIC_KEYS
+        model = build(STABLE)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServingEngine(model, params, max_slots=2, capacity=32)
+        eng.submit(np.arange(5), max_new=3)
+        eng.run_until_drained()
+        m = eng.metrics()
+        assert tuple(m) == METRIC_KEYS
+        assert m["completed"] == 1 and m["deferred"] == 0
+
+    def test_gateway_metrics_reuses_engine_shape(self):
+        from repro.serve.engine import METRIC_KEYS
+        spec = TenantSpec("solo", STABLE, max_slots=2, capacity=32,
+                          prompt_len=5, max_new=4)
+        gw = MultiTenantGateway([spec], _gcfg(), seed=0)
+        gw.submit("solo", np.arange(5))
+        gw.run_until_drained()
+        m = gw.metrics()
+        assert set(m) == {"steps", "kv_bytes_in_use", "deferred_admissions",
+                          "reschedules", "tenants"}
+        assert tuple(m["tenants"]["solo"]) == METRIC_KEYS
 
     def test_admission_gate_defers_and_preserves_fifo(self):
         model = build(STABLE)
