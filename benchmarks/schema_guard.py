@@ -47,6 +47,18 @@ SCHEMAS = {
          "sustained_rps", "slo_p99_violations", "served_tenants",
          "replay_s", "replay_req_per_s"},
     ),
+    "BENCH_recalibrate.json": (
+        {"benchmark", "splits", "tenant_mix", "fleet_tenants", "requests",
+         "seed", "trace_hash", "slo_p99_ms", "drift",
+         "offline_bundle_hash", "offline_fit_max_rel_err", "bundle_s",
+         "refits", "lineage_depth", "head_bundle_hash",
+         "refit_max_rel_err", "frozen_max_rel_err", "err_budget",
+         "violations_frozen", "violations_closed",
+         "recalibration_events", "rows"},
+        {"arm", "requests", "completed", "shed", "throttled", "p50_ms",
+         "p99_ms", "slo_p99_violations", "served_tenants", "reschedules",
+         "recalibrations", "throttle_events", "replay_s"},
+    ),
     "BENCH_profile.json": (
         {"benchmark", "worst_fit_max_rel_err", "worst_vs_generating",
          "worst_objective_rel_diff", "rows"},

@@ -16,6 +16,7 @@ instantiation behaviour described in the paper.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Mapping, Sequence
@@ -168,7 +169,13 @@ class SlowdownMonitor:
         self._holdoff = self.warmup
 
     def observe(self, observed_ms: float, predicted_ms: float) -> bool:
-        if predicted_ms <= 0.0 or observed_ms < 0.0:
+        # a single NaN/inf sample (torn timer read, dead counter) must not
+        # poison the EWMA: NaN folded into ``ratio`` makes every later
+        # ``ratio > threshold`` comparison False and the monitor goes
+        # silently dead for the rest of the run.
+        if (not math.isfinite(observed_ms)
+                or not math.isfinite(predicted_ms)
+                or predicted_ms <= 0.0 or observed_ms < 0.0):
             return False
         r = observed_ms / predicted_ms
         self.ratio = self.alpha * r + (1.0 - self.alpha) * self.ratio
@@ -241,12 +248,27 @@ register_surface_lowering(ScaledContentionModel, _scaled_surface)
 register_vectorized_slowdown(ScaledContentionModel, _scaled_vectorized)
 
 
+#: largest severity ``quantize_severity`` emits.  An observed factor this
+#: large means the prediction underflowed toward 0 (or the platform is
+#: unusably degraded); pricing contention any steeper no longer changes
+#: which schedule wins, and an unbounded factor would overflow
+#: ``round(inf * 16.0)`` and crash the reschedule path.
+MAX_SEVERITY = 64.0
+
+
 def quantize_severity(factor: float) -> float:
-    """Snap an observed slowdown factor to 1/16 steps (>= 1).
+    """Snap an observed slowdown factor to 1/16 steps in [1, MAX_SEVERITY].
 
     Severity resolution no schedule is sensitive to, but coarse enough
-    that re-solves at recurring severities are plan-cache hits.
+    that re-solves at recurring severities are plan-cache hits.  NaN maps
+    to the neutral 1.0 (no measured deviation); +inf and anything beyond
+    :data:`MAX_SEVERITY` clamp to the documented ceiling instead of
+    raising ``OverflowError``.
     """
+    if math.isnan(factor):
+        return 1.0
+    if factor >= MAX_SEVERITY:
+        return MAX_SEVERITY
     return max(1.0, round(factor * 16.0) / 16.0)
 
 

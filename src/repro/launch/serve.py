@@ -124,6 +124,14 @@ def _run_fleet(args) -> int:
           f"tenants={trace.n_tenants} rate={trace.mean_rate_rps:.1f} req/s "
           f"burstiness={trace.burstiness():.2f} hash={trace.trace_hash()[:12]}")
 
+    bundle = model = None
+    if args.profile_bundle:
+        from repro.profiling import ProfileBundle
+        bundle = ProfileBundle.load(args.profile_bundle)
+        model = bundle.model
+        print(f"profile bundle {bundle.bundle_hash()[:12]}: pool plans "
+              f"priced under calibrated {type(model).__name__}")
+
     # full-size configs: the fleet loop bills service from the solved
     # schedule's predictions and never builds the models, so planning the
     # production shapes costs nothing extra.
@@ -136,7 +144,8 @@ def _run_fleet(args) -> int:
              for a, b in splits]
     budget = (args.budget_slots * max(s.kv_bytes_per_slot for s in specs)
               if args.budget_slots else None)
-    pool = build_pool(specs, plats, GatewayConfig(solver=args.solver),
+    pool = build_pool(specs, plats,
+                      GatewayConfig(solver=args.solver, model=model),
                       cache, slots=8)
     solves = sum(pp.scheduler.solves for pp in pool)
     print(f"pool: {len(pool)} plans, {solves} solver invocation(s)")
@@ -145,12 +154,26 @@ def _run_fleet(args) -> int:
               f"sharded cache at {args.cache_root} did not cover the pool")
         return 1
 
+    recal = None
+    if args.recalibrate:
+        from repro.profiling import StreamingRecalibrator
+        recal = StreamingRecalibrator(
+            bundle, window=args.recalibrate_window,
+            min_new=args.recalibrate_min_new)
+        print(f"closed-loop recalibration on: window="
+              f"{args.recalibrate_window} min_new={args.recalibrate_min_new}")
     cfg = FleetConfig(policy=args.policy, default_slo=parse_slo(args.slo),
-                      memory_budget_bytes=budget)
+                      memory_budget_bytes=budget, throttle=args.throttle,
+                      throttle_duty=args.throttle_duty)
     gw = FleetGateway(pool, n_tenants=trace.n_tenants, cfg=cfg,
-                      capacity_hint=len(trace))
+                      capacity_hint=len(trace), recalibrator=recal)
     rep = gw.replay(trace)
     print(rep.summary())
+    if recal is not None:
+        head = recal.bundle
+        print(f"recalibration: {recal.refits} re-fit(s) published, lineage "
+              f"depth {len(recal.lineage)}, head {head.bundle_hash()[:12]} "
+              f"(root {recal.lineage[0].bundle_hash()[:12]})")
     return 0
 
 
@@ -197,10 +220,31 @@ def main(argv=None):
     ap.add_argument("--plan-only", action="store_true",
                     help="plan (and optionally save) without serving")
     ap.add_argument("--profile-bundle", default=None, metavar="PATH",
-                    help="plan the gateway from a measured ProfileBundle "
-                         "(repro.launch.profile): the bundle's platform "
-                         "and calibrated contention model replace the "
-                         "built-in pod split + default model")
+                    help="plan from a measured ProfileBundle "
+                         "(repro.launch.profile). With --gateway the "
+                         "bundle's platform and calibrated contention model "
+                         "replace the built-in pod split + default model; "
+                         "with --fleet the calibrated model prices every "
+                         "pool plan and seeds --recalibrate")
+    ap.add_argument("--recalibrate", action="store_true",
+                    help="fleet mode: stream completion telemetry into a "
+                         "StreamingRecalibrator seeded from "
+                         "--profile-bundle; published re-fits (versioned, "
+                         "lineage-hashed) are adopted by every pool plan "
+                         "at reschedule time")
+    ap.add_argument("--recalibrate-window", type=int, default=256,
+                    metavar="N", help="telemetry window size (live "
+                         "samples) for streaming re-fits")
+    ap.add_argument("--recalibrate-min-new", type=int, default=128,
+                    metavar="N", help="fresh samples required between "
+                         "consecutive re-fits")
+    ap.add_argument("--throttle", action="store_true",
+                    help="fleet mode: duty-cycle tenants whose SLOs still "
+                         "cannot be met after re-solving (per-tenant "
+                         "hysteresis, pressure-held release)")
+    ap.add_argument("--throttle-duty", type=float, default=0.5,
+                    metavar="F", help="fraction of a throttled tenant's "
+                         "arrivals admitted (deterministic token bucket)")
     ap.add_argument("--solver", default="auto", metavar="NAME",
                     help="registry solver entry for any fresh gateway "
                          "solve: z3 | bb | greedy | anneal (device-resident "
@@ -248,8 +292,11 @@ def main(argv=None):
             ap.error("--fleet requires --trace")
         if args.expect_cached and not args.cache_root:
             ap.error("--expect-cached requires --cache-root")
+        if args.recalibrate and not args.profile_bundle:
+            ap.error("--recalibrate requires --profile-bundle (the offline "
+                     "seed of the lineage chain)")
         return _run_fleet(args)
-    for flag in ("trace", "cache_root"):
+    for flag in ("trace", "cache_root", "recalibrate", "throttle"):
         if getattr(args, flag):
             ap.error(f"--{flag.replace('_', '-')} requires --fleet")
 
@@ -257,7 +304,7 @@ def main(argv=None):
         if not args.gateway:
             ap.error("--plan/--save-plan/--plan-only require --gateway")
     if args.profile_bundle and not args.gateway:
-        ap.error("--profile-bundle requires --gateway")
+        ap.error("--profile-bundle requires --gateway or --fleet")
     if args.gateway:
         if not args.co_arch:
             ap.error("--gateway requires --co-arch")

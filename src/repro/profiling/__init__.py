@@ -36,9 +36,11 @@ from __future__ import annotations
 from typing import Sequence
 
 from .bundle import (FORMAT, ProfileBundle, platform_from_bundle,
-                     scheduler_from_bundle)
+                     scheduler_from_bundle, verify_lineage)
 from .calibrate import (CalibrationResult, FitReport, fit, fit_piecewise,
-                        fit_proportional)
+                        fit_proportional, proportional_predict)
+from .online import (RecalibrationEvent, SampleWindow,
+                     StreamingRecalibrator)
 from .harness import (Executor, MeasuredGroup, Measurement, Sample,
                       TimerConfig, corun_sweep, graph_from_measurements,
                       measure_arch, measure_samples, measure_wallclock,
@@ -48,9 +50,10 @@ from .virtual import VirtualSoC, paper_like_pccs
 
 __all__ = [
     "FORMAT", "ProfileBundle", "platform_from_bundle",
-    "scheduler_from_bundle",
+    "scheduler_from_bundle", "verify_lineage",
     "CalibrationResult", "FitReport", "fit", "fit_piecewise",
-    "fit_proportional",
+    "fit_proportional", "proportional_predict",
+    "RecalibrationEvent", "SampleWindow", "StreamingRecalibrator",
     "Executor", "MeasuredGroup", "Measurement", "Sample", "TimerConfig",
     "corun_sweep", "graph_from_measurements", "measure_arch",
     "measure_samples", "measure_wallclock", "profile_graphs",

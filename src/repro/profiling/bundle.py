@@ -14,6 +14,17 @@ mis-costing every schedule solved from it.  ``platform_from_bundle`` /
 ``scheduler_from_bundle`` close the loop: a
 :class:`~repro.core.scheduler.Scheduler` solves directly from measured
 profiles, no paper tables involved.
+
+**Lineage.**  Online recalibration (:mod:`repro.profiling.online`)
+republishes bundles as the platform drifts; every such bundle carries
+``parent_hash`` — the content hash of the bundle its model was warm-started
+from — inside the hashed payload, so a live surface is auditable back to
+its offline ancestor and the chain itself is tamper-evident
+(:meth:`ProfileBundle.derive`, :func:`verify_lineage`).  Payload fields
+are frozen after construction: the content hash is cached on first use,
+and a mutable payload would let ``save()`` emit a stale hash that
+``from_dict`` then rejects as corruption.  Non-identity metadata
+(``provenance``, ``created_at``) stays writable.
 """
 from __future__ import annotations
 
@@ -21,7 +32,7 @@ import json
 import pathlib
 import time
 from dataclasses import dataclass, field
-from typing import Any, Mapping
+from typing import Any, Mapping, Sequence
 
 from ..core import registry
 from ..core.accelerators import Platform
@@ -47,6 +58,15 @@ class ProfileBundle:
     #: content hash (it carries timestamps and wall-clock counts).
     provenance: dict = field(default_factory=dict)
     created_at: float = field(default_factory=time.time)
+    #: content hash of the bundle this one was recalibrated from (online
+    #: re-fit lineage); None for offline root bundles.  Part of the hashed
+    #: payload when set, so the lineage chain is itself tamper-evident.
+    parent_hash: str | None = None
+
+    #: payload fields sealed after __post_init__ — the content hash is
+    #: cached on first use and must never go stale against the payload.
+    _PAYLOAD_FIELDS = frozenset(
+        {"platform", "graphs", "model", "samples", "parent_hash"})
 
     def __post_init__(self):
         if not self.graphs:
@@ -60,17 +80,30 @@ class ProfileBundle:
                 raise ValueError(
                     f"measured graph {g.name!r} covers no accelerator of "
                     f"platform {self.platform.name!r}")
+        self.__dict__["_sealed"] = True
+
+    def __setattr__(self, name: str, value) -> None:
+        if name in self._PAYLOAD_FIELDS and self.__dict__.get("_sealed"):
+            raise AttributeError(
+                f"ProfileBundle payload is frozen: {name!r} participates "
+                f"in the content hash; build a new bundle (see .derive()) "
+                f"instead of mutating this one")
+        super().__setattr__(name, value)
 
     # -- identity ---------------------------------------------------------
     def payload_dict(self) -> dict:
         """The hashed content: everything that affects a solve."""
-        return {
+        d = {
             "format": FORMAT,
             "platform": platform_to_dict(self.platform),
             "graphs": [graph_to_dict(g) for g in self.graphs],
             "model": registry.encode_model(self.model),
             "samples": [list(s) for s in self.samples],
         }
+        # omitted when unset so pre-lineage format-1 hashes stay valid.
+        if self.parent_hash is not None:
+            d["parent_hash"] = self.parent_hash
+        return d
 
     def bundle_hash(self) -> str:
         cached = self.__dict__.get("_hash")
@@ -78,6 +111,27 @@ class ProfileBundle:
             cached = canonical_hash(self.payload_dict())
             self.__dict__["_hash"] = cached
         return cached
+
+    def derive(self, *, model: Any | None = None,
+               samples: Sequence | None = None,
+               provenance: Mapping[str, Any] | None = None,
+               ) -> "ProfileBundle":
+        """A child bundle with ``parent_hash`` pointing back at this one.
+
+        The online recalibrator publishes every re-fit through here:
+        platform and measured graphs carry over, the model (and usually
+        the supporting sample window) are replaced, and the returned
+        bundle's hash covers the lineage pointer.
+        """
+        return ProfileBundle(
+            platform=self.platform,
+            graphs=self.graphs,
+            model=self.model if model is None else model,
+            samples=self.samples if samples is None else tuple(samples),
+            provenance=dict(provenance if provenance is not None
+                            else self.provenance),
+            parent_hash=self.bundle_hash(),
+        )
 
     @property
     def graph_names(self) -> tuple[str, ...]:
@@ -133,6 +187,7 @@ class ProfileBundle:
             samples=tuple(tuple(s) for s in d["samples"]),
             provenance=dict(d.get("provenance", {})),
             created_at=d.get("created_at", 0.0),
+            parent_hash=d.get("parent_hash"),
         )
         recomputed = bundle.bundle_hash()
         if recomputed != d["bundle_hash"]:
@@ -155,6 +210,23 @@ class ProfileBundle:
     @classmethod
     def load(cls, path: str | pathlib.Path) -> "ProfileBundle":
         return cls.from_json(pathlib.Path(path).read_text())
+
+
+def verify_lineage(chain: Sequence[ProfileBundle]) -> None:
+    """Validate a root-first recalibration chain.
+
+    Each bundle after the first must carry ``parent_hash`` equal to its
+    predecessor's content hash (which :meth:`ProfileBundle.bundle_hash`
+    recomputes over the payload, so a tampered ancestor breaks every
+    descendant).  Raises ``ValueError`` on the first broken link.
+    """
+    for i in range(1, len(chain)):
+        want = chain[i - 1].bundle_hash()
+        got = chain[i].parent_hash
+        if got != want:
+            raise ValueError(
+                f"broken bundle lineage at link {i}: parent_hash "
+                f"{(got or 'none')[:12]} != ancestor {want[:12]}")
 
 
 def platform_from_bundle(bundle: ProfileBundle | str | pathlib.Path

@@ -135,7 +135,9 @@ def fit_piecewise(samples: Sequence[Sample], *,
                   ext_knots: Sequence[float] | None = None,
                   n_knots: int = 5, steps: int = 300, lr: float = 0.01,
                   ridge: float = 1e-3,
-                  monotonicity_weight: float = 100.0) -> CalibrationResult:
+                  monotonicity_weight: float = 100.0,
+                  warm_start: PiecewiseModel | None = None,
+                  anchor_weight: float = 1e-3) -> CalibrationResult:
     """Fit a monotone :class:`PiecewiseModel` surface by least squares.
 
     Given fixed knots the hat-basis prediction is *linear* in the table
@@ -147,6 +149,16 @@ def fit_piecewise(samples: Sequence[Sample], *,
     penalty (only active when measurement noise makes the raw optimum
     non-monotone), and the result is exactly projected onto
     {monotone in both axes, >= 1}.
+
+    **Warm-start mode** (``warm_start=<previous PiecewiseModel>``): the
+    streaming re-fit path.  Knot grids and the initial table come from the
+    previous surface — no design matrix, no ``lstsq`` — and Adam polishes
+    from there, with a weak ``anchor_weight`` pull toward the previous
+    table so knots the new sample window does not cover hold their
+    calibrated values instead of drifting.  Each online re-fit is a cheap
+    polish of the live surface, and knot geometry stays fixed across the
+    whole recalibration lineage (refit tables stay comparable and plan
+    caches keyed on the model keep their locality).
     """
     import jax
     import jax.numpy as jnp
@@ -154,18 +166,20 @@ def fit_piecewise(samples: Sequence[Sample], *,
     from ..kernels.ref import _hat_weights, piecewise_slowdown
 
     own, ext, sd = _as_arrays(samples)
-    ok = np.asarray(own_knots if own_knots is not None
-                    else default_knots(own, n_knots), dtype=float)
-    ek = np.asarray(ext_knots if ext_knots is not None
-                    else default_knots(ext, n_knots), dtype=float)
+    if warm_start is not None:
+        if own_knots is not None or ext_knots is not None:
+            raise ValueError(
+                "warm_start fixes the knot grids; do not pass "
+                "own_knots/ext_knots alongside it")
+        ok = np.asarray(warm_start.own_knots, dtype=float)
+        ek = np.asarray(warm_start.ext_knots, dtype=float)
+    else:
+        ok = np.asarray(own_knots if own_knots is not None
+                        else default_knots(own, n_knots), dtype=float)
+        ek = np.asarray(ext_knots if ext_knots is not None
+                        else default_knots(ext, n_knots), dtype=float)
     if (np.diff(ok) <= 0).any() or (np.diff(ek) <= 0).any():
         raise ValueError("knots must be strictly increasing")
-
-    # anchor for unsupported knots: inverse-distance-weighted fill (the
-    # pccs_from_pairs fitter the paper-calibrated profiles used).
-    anchor = np.asarray(pccs_from_pairs(
-        list(zip(own, ext, sd)), own_knots=tuple(ok), ext_knots=tuple(ek)
-    ).table, dtype=float)
 
     own_j = jnp.asarray(own)
     ext_j = jnp.asarray(ext)
@@ -173,15 +187,27 @@ def fit_piecewise(samples: Sequence[Sample], *,
     ok_j = jnp.asarray(ok)
     ek_j = jnp.asarray(ek)
 
-    # unconstrained optimum: ridge-regularized linear least squares.
-    ho = _hat_weights(ok_j, own_j)                    # (N, K)
-    he = _hat_weights(ek_j, ext_j)                    # (N, M)
-    design = (ho[:, :, None] * he[:, None, :]).reshape(len(own), -1)
-    a = jnp.concatenate(
-        [design, np.sqrt(ridge) * jnp.eye(design.shape[1])])
-    b = jnp.concatenate([sd_j, np.sqrt(ridge) * jnp.asarray(anchor.ravel())])
-    init, *_ = jnp.linalg.lstsq(a, b)
-    init = init.reshape(len(ok), len(ek))
+    if warm_start is not None:
+        anchor = np.asarray(warm_start.table, dtype=float)
+        init = jnp.asarray(anchor)
+    else:
+        # anchor for unsupported knots: inverse-distance-weighted fill (the
+        # pccs_from_pairs fitter the paper-calibrated profiles used).
+        anchor = np.asarray(pccs_from_pairs(
+            list(zip(own, ext, sd)), own_knots=tuple(ok), ext_knots=tuple(ek)
+        ).table, dtype=float)
+        # unconstrained optimum: ridge-regularized linear least squares.
+        ho = _hat_weights(ok_j, own_j)                    # (N, K)
+        he = _hat_weights(ek_j, ext_j)                    # (N, M)
+        design = (ho[:, :, None] * he[:, None, :]).reshape(len(own), -1)
+        a = jnp.concatenate(
+            [design, np.sqrt(ridge) * jnp.eye(design.shape[1])])
+        b = jnp.concatenate(
+            [sd_j, np.sqrt(ridge) * jnp.asarray(anchor.ravel())])
+        init, *_ = jnp.linalg.lstsq(a, b)
+        init = init.reshape(len(ok), len(ek))
+
+    anchor_j = jnp.asarray(anchor)
 
     def loss_fn(table):
         pred = piecewise_slowdown(own_j, ext_j, ok_j, ek_j, table)
@@ -192,10 +218,15 @@ def fit_piecewise(samples: Sequence[Sample], *,
         floor = jnp.minimum(table - 1.0, 0.0)
         pen = (jnp.sum(neg_own ** 2) + jnp.sum(neg_ext ** 2)
                + jnp.sum(floor ** 2))
-        return mse + monotonicity_weight * pen
+        loss = mse + monotonicity_weight * pen
+        if warm_start is not None:
+            # weak pull toward the previous surface: unobserved knots keep
+            # their calibrated values across streaming re-fits.
+            loss = loss + anchor_weight * jnp.mean((table - anchor_j) ** 2)
+        return loss
 
     init_np = np.asarray(init)
-    already_feasible = (
+    already_feasible = warm_start is None and (
         (np.diff(init_np, axis=0) >= 0).all()
         and (np.diff(init_np, axis=1) >= 0).all()
         and (init_np >= 1.0).all())
@@ -219,6 +250,24 @@ def fit_piecewise(samples: Sequence[Sample], *,
         pred, sd, steps, float(losses[0]), float(losses[-1])))
 
 
+def proportional_predict(own, ext, capacity, sensitivity):
+    """Vectorized :meth:`ProportionalShareModel.slowdown` (jnp arrays).
+
+    The differentiable form the proportional fitter optimizes.  Must stay
+    numerically identical to the scalar model on every input (including
+    the own=0 and total==capacity boundaries) — the differential test in
+    ``tests/test_profiling.py`` pins the two against each other, so a
+    drift in either formula fails loudly instead of silently mis-fitting
+    every proportional re-fit.
+    """
+    import jax.numpy as jnp
+
+    total = own + ext
+    bound = jnp.minimum(1.0, own / capacity)
+    s = 1.0 + sensitivity * bound * (total / capacity - 1.0)
+    return jnp.where(total <= capacity, 1.0, jnp.maximum(1.0, s))
+
+
 def fit_proportional(samples: Sequence[Sample], *, steps: int = 400,
                      lr: float = 0.05) -> CalibrationResult:
     """Fit :class:`ProportionalShareModel`'s (capacity, sensitivity)."""
@@ -229,10 +278,7 @@ def fit_proportional(samples: Sequence[Sample], *, steps: int = 400,
     own_j, ext_j, sd_j = jnp.asarray(own), jnp.asarray(ext), jnp.asarray(sd)
 
     def predict(cap, sens):
-        total = own_j + ext_j
-        bound = jnp.minimum(1.0, own_j / cap)
-        s = 1.0 + sens * bound * (total / cap - 1.0)
-        return jnp.where(total <= cap, 1.0, jnp.maximum(1.0, s))
+        return proportional_predict(own_j, ext_j, cap, sens)
 
     def loss_fn(p):
         cap = jax.nn.softplus(p[0])

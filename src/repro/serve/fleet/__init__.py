@@ -11,13 +11,16 @@ tenants over a small pool of solved SoC plans":
   :class:`AdmissionController`.
 * :mod:`~repro.serve.fleet.loop` — the virtual-time fleet gateway:
   per-tenant queues, KV-budget admission, earliest-finish SLO routing vs
-  round-robin, per-plan §4.4 slowdown monitoring, an asyncio front-end,
-  and flat-array per-request telemetry (:class:`FleetReport`).
+  round-robin, per-plan §4.4 slowdown monitoring, closed-loop online
+  recalibration (streamed telemetry → PCCS re-fit → model adoption) with
+  per-tenant duty-cycle throttling as the fallback mitigation, an asyncio
+  front-end, and flat-array per-request telemetry (:class:`FleetReport`).
 """
 from repro.serve.fleet.loop import (FleetConfig, FleetGateway, FleetReport,
                                     FleetRescheduleEvent, PoolPlan,
                                     build_pool, serve_async)
-from repro.serve.fleet.slo import SLO, AdmissionController, parse_slo
+from repro.serve.fleet.slo import (SLO, AdmissionController, TenantThrottle,
+                                   parse_slo)
 from repro.serve.fleet.traffic import (ArrivalTrace, GENERATORS,
                                        bursty_trace, diurnal_trace,
                                        parse_trace_spec, poisson_trace)
@@ -25,7 +28,7 @@ from repro.serve.fleet.traffic import (ArrivalTrace, GENERATORS,
 __all__ = [
     "ArrivalTrace", "GENERATORS", "bursty_trace", "diurnal_trace",
     "parse_trace_spec", "poisson_trace",
-    "SLO", "AdmissionController", "parse_slo",
+    "SLO", "AdmissionController", "TenantThrottle", "parse_slo",
     "FleetConfig", "FleetGateway", "FleetReport", "FleetRescheduleEvent",
     "PoolPlan", "build_pool", "serve_async",
 ]

@@ -32,6 +32,18 @@ that front-end:
   re-solves that pool plan under the observed severity
   (:func:`~repro.core.dynamic.reschedule_plan`), adopting the new
   assignment only when it genuinely improves the scaled-model objective.
+* **Closed-loop recalibration** — pass a
+  :class:`~repro.profiling.online.StreamingRecalibrator` and every
+  completion under external demand feeds an ``(own, ext, slowdown)``
+  telemetry sample into it; each monitor firing first steps the
+  recalibrator, and a published re-fit is adopted into *every* pool
+  plan's scheduler before the re-solve, so the §4.4 response prices
+  contention against the live surface instead of the stale offline one.
+  When re-solving under the re-fitted model still cannot meet a tenant's
+  SLO, the tenant is duty-cycled
+  (:class:`~repro.serve.fleet.slo.TenantThrottle` +
+  ``AdmissionController.duty_admit``) until its miss rate recovers —
+  re-solve first, shed load second.
 * :func:`serve_async` — an ``asyncio`` front-end over the same machine:
   submissions become awaitable completions, arrivals are paced in wall
   time (``time_scale``), so an interactive service and the virtual-time
@@ -48,7 +60,7 @@ import dataclasses
 import heapq
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Mapping, Sequence
+from typing import TYPE_CHECKING, Callable, Mapping, Sequence
 
 import numpy as np
 
@@ -59,11 +71,20 @@ from repro.core.simulate import simulate
 from repro.core.solver_bb import Solution
 from repro.serve.gateway import (GatewayConfig, GatewayPlan, TenantSpec,
                                  plan_gateway)
-from repro.serve.fleet.slo import SLO, AdmissionController
+from repro.serve.fleet.slo import SLO, AdmissionController, TenantThrottle
 from repro.serve.fleet.traffic import ArrivalTrace
 
+if TYPE_CHECKING:  # pragma: no cover - annotation only (avoids jax import)
+    from repro.profiling.online import StreamingRecalibrator
+
 # request status codes (FleetReport.status)
-PENDING, RUNNING, DONE, SHED = 0, 1, 2, 3
+PENDING, RUNNING, DONE, SHED, THROTTLED = 0, 1, 2, 3, 4
+
+#: a contention oracle maps ``(pool_plan, ext_demand)`` to the true
+#: per-class severity factors — benchmark harnesses wrap the generating
+#: model here so injected *demand* is priced through ground truth while
+#: the gateway's own model may have drifted away from it.
+ContentionOracle = Callable[["PoolPlan", float], "float | np.ndarray"]
 
 
 # ---------------------------------------------------------------------------
@@ -88,7 +109,14 @@ class PoolPlan:
     base_step_ms: np.ndarray = field(init=False)
     #: KV bytes one in-flight request pins, per class.
     kv_bytes: np.ndarray = field(init=False)
-    #: external contention severity currently applied (1.0 = none).
+    #: mean shared-memory demand of each class's decode groups on their
+    #: assigned accelerators — the ``own`` coordinate of the telemetry
+    #: samples the online recalibrator consumes.
+    class_demand: np.ndarray = field(init=False)
+    #: external contention severity currently applied per class (1 = none).
+    factor_per_class: np.ndarray = field(init=False)
+    #: scalar view of the applied severity (mean over classes) — the §4.4
+    #: deviation signal and the back-compat knob for scalar callers.
     factor: float = 1.0
 
     def __post_init__(self):
@@ -104,6 +132,8 @@ class PoolPlan:
         self.step_ms = self.base_step_ms.copy()
         self.kv_bytes = np.array(
             [float(s.kv_bytes_per_slot) for s in self.plan.specs])
+        self.factor_per_class = np.ones(len(self.classes))
+        self.class_demand = self._class_demand()
 
     def service_ms(self, cls: int, max_new: int) -> float:
         """Predicted service time of one request (decode macro steps)."""
@@ -115,21 +145,58 @@ class PoolPlan:
         return np.array(
             [view.predicted_decode_step_ms(c) for c in self.classes])
 
-    def apply_factor(self, factor: float) -> None:
+    def _class_demand(self) -> np.ndarray:
+        """Mean decode-group memory demand per class under the current
+        assignment (fraction of shared-domain capacity)."""
+        out = np.zeros(len(self.classes))
+        for j, (cls, graph) in enumerate(zip(self.classes,
+                                             self.plan.graphs)):
+            npf = self.plan.n_prefill_groups[cls]
+            asg = self.plan.assignment_of(cls)
+            dem = [graph.groups[g].demand_on(asg[g])
+                   for g in range(npf, len(graph))]
+            out[j] = float(np.mean(dem)) if dem else 0.0
+        return out
+
+    def apply_factor(self, factor: "float | np.ndarray") -> None:
         """Apply external contention severity ``factor`` (1.0 = none).
 
         Models a co-runner the schedule did not plan for — another
         workload on the SoC saturating the shared-memory domains — which
-        slows *every* group on this plan multiplicatively.  Observed step
+        slows every group on this plan multiplicatively.  A scalar slows
+        all classes uniformly; a per-class array (a contention oracle's
+        output) prices each class at its own severity.  Observed step
         latency becomes ``base * factor``, which is exactly the deviation
         signal the §4.4 :class:`SlowdownMonitor` consumes; the response
         (:meth:`reschedule`) re-solves under a contention model rescaled
         to the observed severity.
         """
-        if factor <= 0.0:
+        vec = np.broadcast_to(np.asarray(factor, dtype=float),
+                              (len(self.classes),)).copy()
+        if np.any(vec <= 0.0):
             raise ValueError("contention factor must be > 0")
-        self.factor = float(factor)
-        self.step_ms = self.base_step_ms * self.factor
+        self.factor_per_class = vec
+        self.factor = float(vec.mean())
+        self.step_ms = self.base_step_ms * vec
+
+    def adopt_model(self, model, *, objective: str = "throughput") -> None:
+        """Swap the scheduler's contention model for a re-fitted one.
+
+        The closed loop calls this when the online recalibrator publishes:
+        future re-solves price contention against the live surface, and
+        the steady-state floor (``base_step_ms``) is re-simulated under it
+        so the §4.4 monitor's deviation baseline tracks the new model.
+        The applied external severity carries over unchanged.
+        """
+        self.scheduler.model = model
+        sol = self.plan.solution
+        res = simulate(self.plan.platform, sol.workloads, model,
+                       record_timeline=True)
+        new = Solution(sol.workloads, res, res.objective(objective),
+                       sol.kind, sol.evaluated, False)
+        self.plan = dataclasses.replace(self.plan, solution=new)
+        self.base_step_ms = self._steps_under(new)
+        self.apply_factor(self.factor_per_class)
 
     def reschedule(self, observed_factor: float, *, objective: str,
                    max_transitions: int, budget_s: float) -> tuple[bool, float, float]:
@@ -171,7 +238,8 @@ class PoolPlan:
             Solution(new.workloads, base_res,
                      base_res.objective(objective), new.kind,
                      new.evaluated, False))
-        self.apply_factor(self.factor)
+        self.class_demand = self._class_demand()
+        self.apply_factor(self.factor_per_class)
         return changed, cur_obj, new.objective
 
 
@@ -225,11 +293,28 @@ class FleetConfig:
     cooldown: int = 256
     warmup: int = 0
     reschedule_budget_s: float = 0.25
+    # ---- throttle knobs (second control axis; see slo.TenantThrottle) ----
+    #: enable per-tenant duty-cycling of SLO-violating tenants.  Only
+    #: engages after at least one §4.4 re-solve — re-solve first, shed
+    #: load second.
+    throttle: bool = False
+    #: fraction of a throttled tenant's arrivals that are still admitted.
+    throttle_duty: float = 0.5
+    throttle_enter: float = 0.5
+    throttle_exit: float = 0.1
+    throttle_patience: int = 8
+    #: prediction headroom: at reschedule time a tenant is throttled when
+    #: its predicted finish (best-plan queueing + service) exceeds
+    #: ``throttle_margin * p99_ms`` — engaging at a fraction of the budget
+    #: drains the backlog *before* deadlines start blowing.
+    throttle_margin: float = 0.5
 
     def __post_init__(self):
         if self.policy not in ("slo", "round_robin"):
             raise ValueError(
                 f"unknown policy {self.policy!r} (slo | round_robin)")
+        if not 0.0 < self.throttle_duty < 1.0:
+            raise ValueError("throttle_duty must be in (0, 1)")
 
 
 @dataclass
@@ -247,7 +332,8 @@ class _Records:
     preallocated to the trace length (replay path)."""
 
     __slots__ = ("n", "tenant", "cls", "plan", "t_arrive", "t_start",
-                 "t_end", "service_ms", "est_ms", "max_new", "status")
+                 "t_end", "service_ms", "est_ms", "max_new", "status",
+                 "ext", "floor_ms")
 
     def __init__(self, capacity: int):
         capacity = max(16, capacity)
@@ -262,6 +348,11 @@ class _Records:
         self.est_ms = np.zeros(capacity, np.float64)
         self.max_new = np.zeros(capacity, np.int32)
         self.status = np.zeros(capacity, np.int8)
+        # telemetry basis captured at service *start* (demand and floor can
+        # both move while a request is in flight; attributing the observed
+        # slowdown to completion-time state would poison the re-fit window).
+        self.ext = np.zeros(capacity, np.float64)
+        self.floor_ms = np.zeros(capacity, np.float64)
 
     def append(self, tenant: int, cls: int, t: float, max_new: int) -> int:
         if self.n == len(self.tenant):
@@ -281,6 +372,8 @@ class _Records:
         self.service_ms[i] = 0.0
         self.est_ms[i] = 0.0
         self.status[i] = PENDING
+        self.ext[i] = 0.0
+        self.floor_ms[i] = 0.0
         self.n += 1
         return i
 
@@ -306,6 +399,12 @@ class FleetReport:
     deferred: int
     slos: Mapping[int, SLO]
     default_slo: SLO
+    #: (t_ms, bundle_hash, max_rel_err) per published online re-fit.
+    recalibrations: list = field(default_factory=list)
+    #: (t_ms, tenant, "throttle" | "release") duty-cycle switches.
+    throttle_events: list = field(default_factory=list)
+    #: arrivals refused by the duty gate (status THROTTLED).
+    throttled: int = 0
 
     # -- derived -----------------------------------------------------------
     @property
@@ -394,7 +493,7 @@ class FleetReport:
         return {"served_tenants": served_tenants,
                 "p99_violations": p99_violations,
                 "throughput_violations": throughput_violations,
-                "shed": self.shed}
+                "shed": self.shed, "throttled": self.throttled}
 
     def tenant_metrics(self, tenant: int) -> dict:
         """One tenant's telemetry in the canonical
@@ -410,7 +509,9 @@ class FleetReport:
             "steps": steps,
             "active": int(running.sum()),
             "queue_depth": int(queued.sum()),
-            "admitted": int(mine.sum()) - int((self.status[mine] == SHED).sum()),
+            "admitted": int(mine.sum())
+            - int((self.status[mine] == SHED).sum())
+            - int((self.status[mine] == THROTTLED).sum()),
             "completed": int(done.sum()),
             "deferred": 0,      # deferral is fleet-global (KV budget)
             "tokens_out": steps,
@@ -429,7 +530,9 @@ class FleetReport:
             f"  slo: {slo['p99_violations']}/{slo['served_tenants']} "
             f"tenants over p99 budget, "
             f"{slo['throughput_violations']} under throughput floor",
-            f"  reschedules={len(self.reschedules)}",
+            f"  reschedules={len(self.reschedules)} "
+            f"recalibrations={len(self.recalibrations)} "
+            f"throttled={self.throttled}",
         ]
         return "\n".join(rows)
 
@@ -444,7 +547,9 @@ class FleetGateway:
     def __init__(self, pool: Sequence[PoolPlan], n_tenants: int,
                  cfg: FleetConfig = FleetConfig(),
                  slos: Mapping[int, SLO] | None = None,
-                 capacity_hint: int = 0):
+                 capacity_hint: int = 0, *,
+                 recalibrator: "StreamingRecalibrator | None" = None,
+                 contention_oracle: ContentionOracle | None = None):
         if not pool:
             raise ValueError("pool must hold at least one PoolPlan")
         classes = pool[0].classes
@@ -470,6 +575,15 @@ class FleetGateway:
                             warmup=cfg.warmup)
             for _ in pool]
         self.reschedules: list[FleetRescheduleEvent] = []
+        # closed-loop recalibration + throttling state
+        self.recalibrator = recalibrator
+        self.contention_oracle = contention_oracle
+        self.recalibrations: list[tuple[float, str, float]] = []
+        self.throttle_events: list[tuple[float, int, str]] = []
+        self._throttles: dict[int, TenantThrottle] = {}
+        #: external antagonist demand currently applied per plan (the
+        #: ``ext`` coordinate of recalibration telemetry; 0 = none known).
+        self._ext_demand = [0.0] * len(pool)
         # runtime state
         self._rec = _Records(capacity_hint)
         self._now = 0.0
@@ -504,6 +618,11 @@ class FleetGateway:
         if not 0 <= tenant < self.n_tenants:
             raise ValueError(f"tenant {tenant} out of range")
         cls = self.class_of(tenant)
+        if not self.controller.duty_admit(tenant):
+            i = self._rec.append(tenant, cls, t_ms, max_new)
+            self._rec.status[i] = THROTTLED
+            self._resolve_future(i)
+            return -1
         waits = [self._load_ms[p] / self.pool[p].slots
                  for p in range(len(self.pool))]
         if self.controller.should_shed(
@@ -562,6 +681,8 @@ class FleetGateway:
             start = max(self._now, float(self._rec.t_arrive[i]))
             self._rec.t_start[i] = start
             self._rec.service_ms[i] = service
+            self._rec.ext[i] = self._ext_demand[p]
+            self._rec.floor_ms[i] = float(pp.base_step_ms[cls])
             self._rec.t_end[i] = start + service
             self._rec.status[i] = RUNNING
             self._seq += 1
@@ -579,6 +700,36 @@ class FleetGateway:
         # §4.4: observed per-step latency vs the steady-state floor.
         observed = self._rec.service_ms[i] / max(1, self._rec.max_new[i])
         floor = float(pp.base_step_ms[cls])
+        # closed loop, axis 1: stream (own, ext, slowdown) telemetry into
+        # the recalibrator whenever external demand is known — priced
+        # against the demand/floor in effect when service *started*.
+        ext = float(self._rec.ext[i])
+        floor_at_start = float(self._rec.floor_ms[i])
+        if (self.recalibrator is not None and ext > 0.0
+                and floor_at_start > 0.0):
+            self.recalibrator.observe(float(pp.class_demand[cls]), ext,
+                                      observed / floor_at_start)
+        # closed loop, axis 2: duty-cycle tenants whose SLOs keep missing
+        # *after* re-solving had its chance (gate on a past reschedule).
+        if self.cfg.throttle and self.reschedules:
+            tenant = int(self._rec.tenant[i])
+            slo = self.controller.slo_for(tenant)
+            missed = (end - float(self._rec.t_arrive[i])) > slo.p99_ms
+            th = self._throttles.get(tenant)
+            if th is None:
+                th = self._throttles[tenant] = TenantThrottle(
+                    enter_miss_rate=self.cfg.throttle_enter,
+                    exit_miss_rate=self.cfg.throttle_exit,
+                    patience=self.cfg.throttle_patience)
+            hold = th.throttled and self._pressure() >= \
+                self.cfg.slowdown_threshold
+            action = th.observe(missed, hold=hold)
+            if action == "throttle":
+                self.controller.set_duty(tenant, self.cfg.throttle_duty)
+                self.throttle_events.append((end, tenant, action))
+            elif action == "release":
+                self.controller.set_duty(tenant, 1.0)
+                self.throttle_events.append((end, tenant, action))
         if self.monitors[p].observe(observed, floor):
             self._reschedule(p, end)
         # a freed slot (or KV budget) may unblock any plan's queue.
@@ -588,6 +739,19 @@ class FleetGateway:
 
     def _reschedule(self, p: int, t_ms: float) -> None:
         pp = self.pool[p]
+        # the re-fit runs *before* the re-solve: a published bundle is
+        # adopted into every pool plan's scheduler, so the §4.4 response
+        # below prices contention against the live surface.
+        if self.recalibrator is not None:
+            published = self.recalibrator.step()
+            if published is not None:
+                err = (self.recalibrator.events[-1].max_rel_err
+                       if self.recalibrator.events else float("nan"))
+                self.recalibrations.append(
+                    (t_ms, published.bundle_hash(), err))
+                for other in self.pool:
+                    other.adopt_model(published.model,
+                                      objective=self.cfg.objective)
         factor = quantize_severity(self.monitors[p].ratio)
         changed, old_obj, new_obj = pp.reschedule(
             factor, objective=self.cfg.objective,
@@ -596,6 +760,50 @@ class FleetGateway:
         self.reschedules.append(FleetRescheduleEvent(
             t_ms, pp.name, factor, old_obj, new_obj, changed))
         self.monitors[p].reset()
+        # a changed assignment moves class demand; re-price the injected
+        # antagonist through the oracle against the new placement.
+        ext = self._ext_demand[p]
+        if changed and self.contention_oracle is not None and ext > 0.0:
+            pp.apply_factor(self.contention_oracle(pp, ext))
+        if self.cfg.throttle:
+            self._throttle_check(t_ms)
+
+    def _pressure(self) -> float:
+        """Worst currently-applied contention factor across the pool —
+        the signal that decides whether a throttled tenant's low miss
+        rate is genuine recovery or just the duty cycle working."""
+        return max(float(np.max(pp.factor_per_class)) for pp in self.pool)
+
+    def _throttle_check(self, t_ms: float) -> None:
+        """Prediction-driven engagement, run after each §4.4 re-solve:
+        a tenant whose best-plan predicted finish (queueing estimate +
+        re-fit-priced service) still exceeds ``throttle_margin`` of its
+        latency budget gets duty-cycled *now*, before observed deadline
+        misses pile up.  Release stays observation-driven
+        (:meth:`TenantThrottle.observe` hysteresis in ``_complete``),
+        but is *held* while ``_pressure`` stays above the monitor
+        threshold — admitted traffic under a duty cycle looks healthy
+        because of the throttle, not despite it."""
+        waits = [self._load_ms[p] / self.pool[p].slots
+                 for p in range(len(self.pool))]
+        finish_by_cls = [
+            min(w + pp.service_ms(c, pp.plan.specs[c].max_new)
+                for w, pp in zip(waits, self.pool))
+            for c in range(len(self.classes))]
+        for tenant in range(self.n_tenants):
+            budget = self.controller.slo_for(tenant).p99_ms
+            if (finish_by_cls[self.class_of(tenant)]
+                    <= self.cfg.throttle_margin * budget):
+                continue
+            th = self._throttles.get(tenant)
+            if th is None:
+                th = self._throttles[tenant] = TenantThrottle(
+                    enter_miss_rate=self.cfg.throttle_enter,
+                    exit_miss_rate=self.cfg.throttle_exit,
+                    patience=self.cfg.throttle_patience)
+            if th.engage():
+                self.controller.set_duty(tenant, self.cfg.throttle_duty)
+                self.throttle_events.append((t_ms, tenant, "throttle"))
 
     # -- external contention (tests / benchmarks / replay harnesses) ------
     def set_contention(self, plan: int, factor: float) -> None:
@@ -604,34 +812,71 @@ class FleetGateway:
         — the knob replay harnesses use to trigger the §4.4 loop."""
         self.pool[plan].apply_factor(factor)
 
+    def set_demand(self, plan: int, ext_demand: float) -> None:
+        """Inject external antagonist *demand* (fraction of shared-domain
+        capacity) on one pool plan.
+
+        Unlike :meth:`set_contention` (a raw severity factor), demand is
+        priced through the ``contention_oracle`` — ground truth in a drift
+        benchmark — into per-class factors, and it gives recalibration
+        telemetry its ``ext`` coordinate: completions under non-zero
+        demand stream ``(own, ext, observed slowdown)`` samples into the
+        recalibrator.
+        """
+        if ext_demand < 0.0:
+            raise ValueError("ext_demand must be >= 0")
+        if self.contention_oracle is None:
+            raise ValueError(
+                "set_demand requires a contention_oracle to price demand "
+                "into severity (use set_contention for raw factors)")
+        self._ext_demand[plan] = float(ext_demand)
+        pp = self.pool[plan]
+        if ext_demand > 0.0:
+            pp.apply_factor(self.contention_oracle(pp, float(ext_demand)))
+        else:
+            pp.apply_factor(1.0)
+
     # -- replay ------------------------------------------------------------
     def replay(self, trace: ArrivalTrace,
                contention_events: Sequence[tuple[float, int, float]] = (),
-               drain: bool = True) -> FleetReport:
+               drain: bool = True,
+               demand_events: Sequence[tuple[float, int, float]] = (),
+               ) -> FleetReport:
         """Replay an arrival trace through the loop (virtual time).
 
         ``contention_events`` is a sorted sequence of ``(t_ms, plan_idx,
         factor)`` external-severity switches merged into the arrival
-        stream.  With ``drain`` the clock runs until the last admitted
-        request completes.
+        stream; ``demand_events`` are ``(t_ms, plan_idx, ext_demand)``
+        antagonist-demand switches routed through :meth:`set_demand`
+        (they drive the closed recalibration loop and require a
+        ``contention_oracle``).  With ``drain`` the clock runs until the
+        last admitted request completes.
         """
         if trace.n_tenants > self.n_tenants:
             raise ValueError(
                 f"trace has {trace.n_tenants} tenants, gateway admits "
                 f"{self.n_tenants}")
-        events = sorted(contention_events)
+        events = sorted(
+            [(t, p, v, False) for t, p, v in contention_events]
+            + [(t, p, v, True) for t, p, v in demand_events])
+
+        def fire(t_ev: float, plan: int, val: float, is_demand: bool):
+            self.advance(t_ev)
+            if is_demand:
+                self.set_demand(plan, val)
+            else:
+                self.set_contention(plan, val)
+
         e = 0
         t_arr, tenants, mnew = trace.t_ms, trace.tenant, trace.max_new
         for k in range(len(trace)):
             t = float(t_arr[k])
             while e < len(events) and events[e][0] <= t:
-                self.advance(events[e][0])
-                self.set_contention(events[e][1], events[e][2])
+                fire(*events[e])
                 e += 1
             self.submit(t, int(tenants[k]), int(mnew[k]))
-        for t_ev, plan, factor in events[e:]:
-            self.advance(t_ev)
-            self.set_contention(plan, factor)
+        for ev in events[e:]:
+            fire(*ev)
         if drain:
             self.drain()
         return self.report()
@@ -650,7 +895,10 @@ class FleetGateway:
             reschedules=list(self.reschedules),
             shed=self.controller.shed, deferred=self.controller.deferred,
             slos=dict(self.controller.slos),
-            default_slo=self.controller.default_slo)
+            default_slo=self.controller.default_slo,
+            recalibrations=list(self.recalibrations),
+            throttle_events=list(self.throttle_events),
+            throttled=self.controller.throttled)
 
     def metrics(self) -> dict:
         """Live telemetry in the gateway's ``metrics()`` shape: per-tenant

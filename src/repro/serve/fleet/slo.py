@@ -29,10 +29,20 @@ Decision semantics (one request):
    (``try_acquire``/``release``), so queued requests never pin memory.
 3. **defer** — an admitted request whose service start is blocked on the
    KV budget; it stays queued and is retried as budget frees.
+4. **throttle** — contention *mitigation*, the closed loop's second
+   control axis (MoCA's per-tenant throttling; the duty-cycle mechanism of
+   :class:`~repro.profiling.probes.MemoryProbe` applied as a control
+   action instead of an antagonist): when re-solving under the re-fitted
+   contention model still cannot meet a tenant's SLO, the tenant is
+   duty-cycled — only ``duty`` of its arrivals are admitted, via a
+   deterministic token bucket — until its deadline-miss rate recovers.
+   :class:`TenantThrottle` is the hysteresis state machine deciding
+   engage/release, with separate enter/exit thresholds plus patience on
+   both edges so throttle/unthrottle does not flap.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping, Sequence
 
 
@@ -83,6 +93,87 @@ def parse_slo(spec: str) -> SLO:
     return SLO(**kwargs)
 
 
+@dataclass
+class TenantThrottle:
+    """Hysteresis engage/release controller for one tenant's duty cycle.
+
+    ``observe`` folds each completion's deadline outcome into an EWMA
+    miss rate and returns ``"throttle"`` once the rate stays above
+    ``enter_miss_rate`` for ``patience`` consecutive completions,
+    ``"release"`` once a throttled tenant stays below ``exit_miss_rate``
+    for ``patience`` completions, and ``None`` otherwise.  The gap between
+    the two thresholds plus the patience on both edges is the hysteresis:
+    a tenant hovering at the boundary never flaps.
+    """
+
+    #: EWMA deadline-miss rate that engages the throttle.
+    enter_miss_rate: float = 0.5
+    #: EWMA miss rate a throttled tenant must fall below to release.
+    exit_miss_rate: float = 0.1
+    #: consecutive observations beyond a threshold before switching.
+    patience: int = 8
+    #: EWMA weight of the newest completion.
+    alpha: float = 0.2
+
+    miss_ewma: float = field(init=False, default=0.0)
+    throttled: bool = field(init=False, default=False)
+    switches: int = field(init=False, default=0)
+    _strikes: int = field(init=False, default=0)
+
+    def __post_init__(self):
+        if not 0.0 <= self.exit_miss_rate < self.enter_miss_rate <= 1.0:
+            raise ValueError(
+                "need 0 <= exit_miss_rate < enter_miss_rate <= 1 "
+                "(the gap is the hysteresis)")
+        if self.patience < 1:
+            raise ValueError("patience must be >= 1")
+
+    def engage(self) -> bool:
+        """Force-engage (prediction-driven, at reschedule time): the
+        re-solved plan's predicted finish still blows the tenant's budget,
+        so don't wait for observed misses to accumulate.  Seeds the miss
+        EWMA at 1 so release still requires a sustained run of on-time
+        completions.  Returns False when already throttled."""
+        if self.throttled:
+            return False
+        self.throttled = True
+        self._strikes = 0
+        self.miss_ewma = 1.0
+        self.switches += 1
+        return True
+
+    def observe(self, missed: bool, hold: bool = False) -> str | None:
+        """Fold one completion's deadline outcome; maybe switch state.
+
+        ``hold=True`` pins an engaged throttle regardless of the miss
+        rate: under a duty cycle the *admitted* traffic looks healthy
+        precisely because of the throttle, so while the condition that
+        caused the engagement persists (e.g. priced contention still
+        above the monitor threshold) a low miss EWMA must not trigger
+        release — that would re-flood the queues the duty cycle just
+        drained and flap."""
+        self.miss_ewma = (self.alpha * (1.0 if missed else 0.0)
+                          + (1.0 - self.alpha) * self.miss_ewma)
+        if not self.throttled and self.miss_ewma > self.enter_miss_rate:
+            self._strikes += 1
+            if self._strikes >= self.patience:
+                self.throttled, self._strikes = True, 0
+                self.switches += 1
+                return "throttle"
+        elif self.throttled and self.miss_ewma < self.exit_miss_rate:
+            if hold:
+                self._strikes = 0
+                return None
+            self._strikes += 1
+            if self._strikes >= self.patience:
+                self.throttled, self._strikes = False, 0
+                self.switches += 1
+                return "release"
+        else:
+            self._strikes = 0
+        return None
+
+
 class AdmissionController:
     """Shared KV budget + SLO policy for a fleet of tenants.
 
@@ -105,9 +196,13 @@ class AdmissionController:
         self.max_queue_per_tenant = max_queue_per_tenant
         self.shed_factor = shed_factor
         self.kv_bytes_in_use = 0.0
+        #: per-tenant duty cycle (absent/1.0 = unthrottled).
+        self.duty: dict[int, float] = {}
+        self._duty_acc: dict[int, float] = {}
         # counters (telemetry)
         self.shed = 0
         self.deferred = 0
+        self.throttled = 0
 
     # -- SLO lookup --------------------------------------------------------
     def slo_for(self, tenant: int) -> SLO:
@@ -142,6 +237,41 @@ class AdmissionController:
                 self.deferred += 1
             return ok
         return gate
+
+    # -- duty-cycle throttling (MoCA-style mitigation) ---------------------
+    def set_duty(self, tenant: int, duty: float) -> None:
+        """Set (or clear, with ``duty >= 1``) a tenant's admission duty
+        cycle.  The accumulator resets so a fresh throttle takes effect on
+        the very next arrival."""
+        if not 0.0 < duty:
+            raise ValueError("duty must be > 0")
+        if duty >= 1.0:
+            self.duty.pop(tenant, None)
+            self._duty_acc.pop(tenant, None)
+        else:
+            self.duty[tenant] = duty
+            self._duty_acc[tenant] = 0.0
+
+    def duty_of(self, tenant: int) -> float:
+        return self.duty.get(tenant, 1.0)
+
+    def duty_admit(self, tenant: int) -> bool:
+        """Deterministic token bucket: admit exactly ``duty`` of a
+        throttled tenant's arrivals (the duty-cycle mechanism of
+        ``profiling.probes.MemoryProbe``, applied as mitigation).  Each
+        arrival deposits ``duty``; an arrival is admitted when the bucket
+        holds a full token.  No randomness: the admit pattern for
+        ``duty=0.5`` is strictly alternating."""
+        duty = self.duty.get(tenant)
+        if duty is None:
+            return True
+        acc = self._duty_acc.get(tenant, 0.0) + duty
+        if acc >= 1.0 - 1e-12:
+            self._duty_acc[tenant] = acc - 1.0
+            return True
+        self._duty_acc[tenant] = acc
+        self.throttled += 1
+        return False
 
     # -- admission / shedding ---------------------------------------------
     def should_shed(self, tenant: int, queue_depth: int,
@@ -185,4 +315,6 @@ class AdmissionController:
     def metrics(self) -> dict:
         return {"kv_bytes_in_use": self.kv_bytes_in_use,
                 "budget_bytes": self.budget_bytes,
-                "shed": self.shed, "deferred": self.deferred}
+                "shed": self.shed, "deferred": self.deferred,
+                "throttled": self.throttled,
+                "duty": dict(self.duty)}

@@ -215,6 +215,54 @@ class TestCalibrate:
                 [(0.5, 0.5, 1.2)], "gaussian-process")
 
 
+class TestProportionalDifferential:
+    """proportional_predict (the differentiable fitter form) must stay
+    numerically identical to ProportionalShareModel.slowdown — a drift in
+    either formula would silently mis-fit every proportional re-fit."""
+
+    def _diff(self, own, ext, capacity, sensitivity):
+        import jax.numpy as jnp
+        model = ProportionalShareModel(capacity=capacity,
+                                       sensitivity=sensitivity)
+        scalar = np.asarray([model.slowdown(o, e)
+                             for o, e in zip(own, ext)])
+        vec = np.asarray(calibrate.proportional_predict(
+            jnp.asarray(own), jnp.asarray(ext), capacity, sensitivity))
+        np.testing.assert_allclose(vec, scalar, rtol=1e-6, atol=1e-6)
+
+    def test_dense_grid_matches_scalar(self):
+        rng = np.random.default_rng(11)
+        own = rng.uniform(0.0, 1.2, 500)
+        ext = rng.uniform(0.0, 1.2, 500)
+        self._diff(own, ext, 1.0, 1.5)
+
+    def test_fitted_parameters_match_scalar(self):
+        # exercise the exact (capacity, sensitivity) a fit produces, not
+        # just round numbers.
+        truth = ProportionalShareModel(capacity=0.8, sensitivity=2.5)
+        rng = np.random.default_rng(12)
+        own = rng.uniform(0.05, 1.0, 200)
+        ext = rng.uniform(0.05, 1.0, 200)
+        r = calibrate.fit_proportional(
+            [(o, e, truth.slowdown(o, e)) for o, e in zip(own, ext)])
+        self._diff(own, ext, r.model.capacity, r.model.sensitivity)
+
+    def test_own_zero_boundary(self):
+        # own == 0 must give exactly 1.0 in both forms, even when the
+        # total is far beyond capacity.
+        own = np.zeros(5)
+        ext = np.asarray([0.0, 0.5, 1.0, 2.0, 10.0])
+        self._diff(own, ext, 0.7, 3.0)
+
+    def test_total_equals_capacity_boundary(self):
+        # total == capacity sits exactly on the free/contended breakpoint;
+        # both forms must agree it is still free (slowdown 1.0).
+        cap = 0.9
+        own = np.asarray([0.1, 0.45, 0.9, 0.3])
+        ext = cap - own
+        self._diff(own, ext, cap, 2.0)
+
+
 # ---------------------------------------------------------------------------
 # bundle artifact
 # ---------------------------------------------------------------------------

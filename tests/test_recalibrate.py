@@ -1,0 +1,444 @@
+"""Closed-loop online recalibration: §4.4 monitor hardening, streaming
+PCCS re-fits, versioned bundle lineage, and the duty-cycle throttle axis.
+
+Unit layers (monitor, quantizer, window, throttle state machine, token
+bucket, bundle freeze + lineage) plus one drift-injected fleet smoke
+exercising the whole loop: telemetry → re-fit → publish → adopt →
+throttle.  The full-scale convergence/SLO gates live in
+``benchmarks/bench_recalibrate.py``.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.accelerators import tpu_pod_split, xavier_agx
+from repro.core.contention import PiecewiseModel, ProportionalShareModel
+from repro.core.dynamic import (MAX_SEVERITY, SlowdownMonitor,
+                                quantize_severity)
+from repro.core.profiles import get_graph
+from repro.profiling import (ProfileBundle, StreamingRecalibrator,
+                             verify_lineage)
+from repro.profiling.calibrate import fit_piecewise
+from repro.profiling.online import SampleWindow
+from repro.serve.fleet import (SLO, AdmissionController, FleetConfig,
+                               FleetGateway, TenantThrottle, build_pool,
+                               poisson_trace)
+from repro.serve.fleet.loop import DONE, THROTTLED
+from repro.serve.gateway import GatewayConfig, TenantSpec
+
+
+# ---------------------------------------------------------------------------
+# §4.4 monitor hardening (regressions)
+# ---------------------------------------------------------------------------
+
+class TestMonitorPoisoning:
+    def _hot(self, **kw):
+        """A monitor past warmup, mid-deviation."""
+        m = SlowdownMonitor(threshold=1.5, patience=3, cooldown=4,
+                            warmup=0, **kw)
+        for _ in range(3):                       # EWMA 1.5→1.75→1.875:
+            m.observe(2.0, 1.0)                  # two strikes on the board
+        assert m.strikes == 2
+        return m
+
+    @pytest.mark.parametrize("observed,predicted", [
+        (float("nan"), 1.0), (1.0, float("nan")),
+        (float("inf"), 1.0), (1.0, float("inf")),
+        (float("-inf"), 1.0), (-1.0, 1.0), (1.0, 0.0), (1.0, -2.0),
+    ])
+    def test_bad_sample_is_ignored(self, observed, predicted):
+        m = self._hot()
+        ratio = m.ratio
+        assert m.observe(observed, predicted) is False
+        assert m.ratio == ratio                 # EWMA untouched
+
+    def test_monitor_survives_poisoned_stream(self):
+        # the original bug: one NaN folded into the EWMA made every later
+        # `ratio > threshold` comparison False — monitor silently dead.
+        m = self._hot()
+        m.observe(float("nan"), 1.0)
+        assert m.observe(2.0, 1.0) is True       # third strike still fires
+        assert math.isfinite(m.ratio)
+
+    def test_clean_stream_still_fires(self):
+        m = SlowdownMonitor(threshold=1.5, patience=3, cooldown=4, warmup=0)
+        fired = [m.observe(2.0, 1.0) for _ in range(5)]
+        # EWMA crosses the threshold on observation 2; patience=3 strikes
+        # later the monitor fires exactly once, then holds off (cooldown).
+        assert fired == [False, False, False, True, False]
+
+
+class TestQuantizeSeverity:
+    def test_snaps_to_sixteenths(self):
+        assert quantize_severity(1.3) == pytest.approx(1.3125)
+        assert quantize_severity(0.5) == 1.0     # never below neutral
+
+    def test_nan_maps_to_neutral(self):
+        assert quantize_severity(float("nan")) == 1.0
+
+    @pytest.mark.parametrize("factor", [float("inf"), 1e308, MAX_SEVERITY,
+                                        MAX_SEVERITY + 1.0])
+    def test_overflow_clamps_to_ceiling(self, factor):
+        # round(inf * 16) used to raise OverflowError mid-reschedule.
+        assert quantize_severity(factor) == MAX_SEVERITY
+
+
+# ---------------------------------------------------------------------------
+# telemetry window
+# ---------------------------------------------------------------------------
+
+class TestSampleWindow:
+    def test_rejects_poison_at_the_door(self):
+        w = SampleWindow(maxlen=8)
+        for bad in [(float("nan"), 0.5, 1.2), (0.5, float("inf"), 1.2),
+                    (0.5, 0.5, float("nan")), (-0.1, 0.5, 1.2),
+                    (0.5, -0.5, 1.2), (0.5, 0.5, 0.0)]:
+            assert w.observe(*bad) is False
+        assert len(w) == 0 and w.rejected == 6
+
+    def test_sub_one_slowdown_clipped(self):
+        w = SampleWindow(maxlen=8)
+        assert w.observe(0.5, 0.5, 0.9) is True
+        assert w.samples()[0][2] == 1.0
+
+    def test_fifo_bound_and_new_counter(self):
+        w = SampleWindow(maxlen=8)
+        for i in range(12):
+            w.observe(0.1, 0.1, 1.0 + i)
+        assert len(w) == 8
+        assert w.samples()[0][2] == 5.0          # oldest four evicted
+        assert w.new_since_fit == 12
+        w.mark_fitted()
+        assert w.new_since_fit == 0
+
+    def test_min_size_validated(self):
+        with pytest.raises(ValueError):
+            SampleWindow(maxlen=4)
+
+
+# ---------------------------------------------------------------------------
+# bundle freeze + lineage
+# ---------------------------------------------------------------------------
+
+def _tiny_bundle(model=None) -> ProfileBundle:
+    plat = xavier_agx()
+    model = model or PiecewiseModel(
+        (0.0, 0.5, 1.0), (0.0, 0.5, 1.0),
+        ((1.0, 1.0, 1.0), (1.0, 1.1, 1.2), (1.0, 1.2, 1.4)))
+    return ProfileBundle(platform=plat,
+                         graphs=(get_graph("vgg19", plat),),
+                         model=model, samples=((0.3, 0.4, 1.1),))
+
+
+class TestBundleLineage:
+    def test_payload_frozen_after_construction(self):
+        b = _tiny_bundle()
+        with pytest.raises(AttributeError, match="frozen"):
+            b.model = ProportionalShareModel()
+        with pytest.raises(AttributeError, match="frozen"):
+            b.samples = ()
+        b.provenance["note"] = "metadata stays writable"
+
+    def test_stale_hash_impossible_via_derive(self):
+        # the freeze is what guarantees save() never emits a stale hash:
+        # hash once, derive, and both hashes must still verify.
+        b = _tiny_bundle()
+        h0 = b.bundle_hash()
+        child = b.derive(model=ProportionalShareModel(capacity=0.8))
+        assert b.bundle_hash() == h0
+        assert child.parent_hash == h0
+        assert child.bundle_hash() != h0
+
+    def test_parent_hash_omitted_for_roots(self):
+        # pre-lineage format-1 hashes must stay valid: a root bundle's
+        # payload carries no parent_hash key at all.
+        b = _tiny_bundle()
+        assert "parent_hash" not in b.payload_dict()
+        assert "parent_hash" in b.derive().payload_dict()
+
+    def test_lineage_round_trips_through_json(self):
+        root = _tiny_bundle()
+        mid = root.derive(model=ProportionalShareModel(capacity=0.9))
+        head = mid.derive(model=ProportionalShareModel(capacity=0.7))
+        chain = [ProfileBundle.from_json(b.to_json())
+                 for b in (root, mid, head)]
+        verify_lineage(chain)
+
+    def test_broken_link_detected(self):
+        root = _tiny_bundle()
+        other = root.derive(model=ProportionalShareModel(capacity=0.5))
+        stranger = other.derive()
+        with pytest.raises(ValueError, match="lineage"):
+            verify_lineage([root, stranger])
+
+
+# ---------------------------------------------------------------------------
+# warm-start re-fit
+# ---------------------------------------------------------------------------
+
+class TestWarmStartFit:
+    def test_knot_geometry_is_fixed(self):
+        prev = PiecewiseModel(
+            (0.0, 0.4, 1.0), (0.0, 0.6, 1.2),
+            ((1.0, 1.0, 1.1), (1.0, 1.2, 1.4), (1.1, 1.4, 1.8)))
+        rng = np.random.default_rng(5)
+        own = rng.uniform(0.1, 0.9, 80)
+        ext = rng.uniform(0.1, 1.1, 80)
+        sd = [prev.slowdown(o, e) * 1.3 for o, e in zip(own, ext)]
+        r = fit_piecewise(list(zip(own, ext, sd)), warm_start=prev,
+                          steps=200)
+        assert r.model.own_knots == prev.own_knots
+        assert r.model.ext_knots == prev.ext_knots
+
+    def test_warm_start_rejects_explicit_knots(self):
+        prev = PiecewiseModel((0.0, 1.0), (0.0, 1.0),
+                              ((1.0, 1.2), (1.1, 1.5)))
+        with pytest.raises(ValueError, match="warm_start"):
+            fit_piecewise([(0.5, 0.5, 1.2)], warm_start=prev,
+                          own_knots=(0.0, 1.0))
+
+    def test_polish_tracks_drifted_surface(self):
+        # samples drawn from a uniformly-inflated surface: the warm-started
+        # polish must follow the drift where evidence exists.
+        prev = PiecewiseModel(
+            (0.0, 0.5, 1.0), (0.0, 0.5, 1.0),
+            ((1.0, 1.1, 1.2), (1.1, 1.3, 1.5), (1.2, 1.5, 1.9)))
+        rng = np.random.default_rng(6)
+        own = rng.uniform(0.05, 0.95, 200)
+        ext = rng.uniform(0.05, 0.95, 200)
+        sd = [1.0 + 1.5 * (prev.slowdown(o, e) - 1.0)
+              for o, e in zip(own, ext)]
+        r = fit_piecewise(list(zip(own, ext, sd)), warm_start=prev,
+                          steps=600, lr=0.05, anchor_weight=1e-4)
+        pred = [r.model.slowdown(o, e) for o, e in zip(own, ext)]
+        err = np.max(np.abs(np.asarray(pred) - np.asarray(sd))
+                     / np.asarray(sd))
+        assert err < 0.05
+
+
+# ---------------------------------------------------------------------------
+# streaming recalibrator
+# ---------------------------------------------------------------------------
+
+class TestStreamingRecalibrator:
+    def _drifted(self, n):
+        truth = ProportionalShareModel(capacity=0.6, sensitivity=2.0)
+        rng = np.random.default_rng(7)
+        own = rng.uniform(0.1, 0.9, n)
+        ext = rng.uniform(0.1, 0.9, n)
+        return truth, [(o, e, truth.slowdown(o, e))
+                       for o, e in zip(own, ext)]
+
+    def test_step_gates_on_evidence(self):
+        rec = StreamingRecalibrator(_tiny_bundle(), window=64,
+                                    min_samples=16, min_new=8,
+                                    refit_steps=50)
+        assert rec.step() is None                # empty window
+        _, samples = self._drifted(15)
+        for s in samples:
+            rec.observe(*s)
+        assert rec.step() is None                # below min_samples
+        rec.observe(0.5, 0.5, 1.3)
+        assert rec.step() is not None            # 16 samples, 16 new
+        assert rec.step() is None                # no new evidence yet
+
+    def test_lineage_grows_and_verifies(self):
+        root = _tiny_bundle()
+        rec = StreamingRecalibrator(root, window=64, min_samples=16,
+                                    min_new=8, refit_steps=50)
+        _, samples = self._drifted(48)
+        published = 0
+        for s in samples:
+            rec.observe(*s)
+            if rec.step() is not None:
+                published += 1
+        assert published >= 2 and rec.refits == published
+        assert len(rec.lineage) == published + 1
+        assert rec.lineage[0] is root
+        verify_lineage(rec.lineage)
+        assert rec.events[-1].bundle_hash == rec.bundle.bundle_hash()
+        assert rec.bundle.provenance["refit"]["seq"] == published
+
+    def test_proportional_seed_refits_to_drifted_truth(self):
+        seed = _tiny_bundle(
+            model=ProportionalShareModel(capacity=1.0, sensitivity=1.0))
+        rec = StreamingRecalibrator(seed, window=256, min_samples=64,
+                                    min_new=32, refit_steps=400)
+        truth, samples = self._drifted(256)
+        for s in samples:
+            rec.observe(*s)
+        assert rec.step() is not None
+        assert rec.max_rel_err_against(truth) < 0.05
+
+    def test_poisoned_telemetry_never_reaches_the_fit(self):
+        rec = StreamingRecalibrator(_tiny_bundle(), window=64,
+                                    min_samples=16, min_new=8)
+        assert rec.observe(float("nan"), 0.5, 1.5) is False
+        assert rec.observe(0.5, 0.5, float("inf")) is False
+        assert rec._window.rejected == 2 and len(rec._window) == 0
+
+
+# ---------------------------------------------------------------------------
+# throttle state machine + duty token bucket
+# ---------------------------------------------------------------------------
+
+class TestTenantThrottle:
+    def test_hysteresis_no_flap_at_boundary(self):
+        th = TenantThrottle(enter_miss_rate=0.5, exit_miss_rate=0.1,
+                            patience=4, alpha=0.5)
+        # alternate hit/miss: EWMA hovers near 0.5, never `patience`
+        # consecutive strikes on either edge -> zero switches.
+        for i in range(100):
+            assert th.observe(i % 2 == 0) is None
+        assert th.switches == 0 and not th.throttled
+
+    def test_engage_then_sustained_recovery_releases(self):
+        th = TenantThrottle(enter_miss_rate=0.5, exit_miss_rate=0.1,
+                            patience=3, alpha=0.5)
+        actions = [th.observe(True) for _ in range(6)]
+        assert "throttle" in actions and th.throttled
+        actions = [th.observe(False) for _ in range(12)]
+        assert "release" in actions and not th.throttled
+        assert th.switches == 2
+
+    def test_hold_pins_engaged_throttle(self):
+        th = TenantThrottle(enter_miss_rate=0.5, exit_miss_rate=0.1,
+                            patience=3, alpha=0.5)
+        assert th.engage() is True
+        # miss rate decays to ~0 but the pressure persists: held.
+        for _ in range(50):
+            assert th.observe(False, hold=True) is None
+        assert th.throttled
+        # pressure clears: hysteresis release proceeds.
+        actions = [th.observe(False) for _ in range(6)]
+        assert "release" in actions and not th.throttled
+
+    def test_engage_is_idempotent_and_seeds_ewma(self):
+        th = TenantThrottle()
+        assert th.engage() is True
+        assert th.miss_ewma == 1.0 and th.switches == 1
+        assert th.engage() is False              # already engaged
+        assert th.switches == 1
+
+    def test_validates_hysteresis_gap(self):
+        with pytest.raises(ValueError, match="hysteresis"):
+            TenantThrottle(enter_miss_rate=0.3, exit_miss_rate=0.3)
+        with pytest.raises(ValueError, match="patience"):
+            TenantThrottle(patience=0)
+
+
+class TestDutyTokenBucket:
+    def test_half_duty_strictly_alternates(self):
+        c = AdmissionController()
+        c.set_duty(3, 0.5)
+        got = [c.duty_admit(3) for _ in range(8)]
+        assert got == [False, True] * 4
+        assert c.throttled == 4
+
+    def test_duty_is_exact_over_long_runs(self):
+        c = AdmissionController()
+        c.set_duty(0, 0.25)
+        admitted = sum(c.duty_admit(0) for _ in range(1000))
+        assert admitted == 250
+
+    def test_unthrottled_tenants_unaffected(self):
+        c = AdmissionController()
+        c.set_duty(1, 0.5)
+        assert all(c.duty_admit(2) for _ in range(10))
+        assert c.duty_of(2) == 1.0 and c.duty_of(1) == 0.5
+
+    def test_clear_resets_bucket(self):
+        c = AdmissionController()
+        c.set_duty(0, 0.5)
+        c.duty_admit(0)
+        c.set_duty(0, 1.0)
+        assert c.duty == {} and all(c.duty_admit(0) for _ in range(4))
+        with pytest.raises(ValueError):
+            c.set_duty(0, 0.0)
+
+    def test_metrics_carry_duty_state(self):
+        c = AdmissionController()
+        c.set_duty(7, 0.5)
+        c.duty_admit(7)
+        m = c.metrics()
+        assert m["throttled"] == 1 and m["duty"] == {7: 0.5}
+
+
+# ---------------------------------------------------------------------------
+# closed loop end-to-end (small drift injection)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def closed_loop_report():
+    specs = [TenantSpec("stable", configs.get("stablelm-1.6b"),
+                        max_slots=2, capacity=256, prompt_len=64,
+                        max_new=16),
+             TenantSpec("llama", configs.get("llama3.2-3b"),
+                        max_slots=2, capacity=256, prompt_len=64,
+                        max_new=16)]
+    plats = [tpu_pod_split(1, 3, name="p13"),
+             tpu_pod_split(2, 2, name="p22")]
+    pool = build_pool(specs, plats,
+                      GatewayConfig(max_transitions=1, body_groups=1),
+                      slots=4, deadline_s=5.0)
+    trace = poisson_trace(150.0, 1500, 12, seed=3)
+    end_ms = float(trace.t_ms[-1])
+    cfg = FleetConfig(default_slo=SLO(p99_ms=120.0),
+                      slowdown_threshold=1.2, patience=4, cooldown=64,
+                      reschedule_budget_s=0.05, throttle=True,
+                      throttle_duty=0.5, throttle_margin=0.5)
+    recal = StreamingRecalibrator(_tiny_bundle(), window=128,
+                                  min_samples=32, min_new=32,
+                                  refit_steps=80)
+    # ground-truth oracle: constant 1.6x once the antagonist arrives.
+    oracle = lambda pp, ext: np.full(len(pp.class_demand), 1.0 + 2.0 * ext)
+    gw = FleetGateway(pool, n_tenants=12, cfg=cfg,
+                      capacity_hint=len(trace), recalibrator=recal,
+                      contention_oracle=oracle)
+    demand = [(0.3 * end_ms, p, 0.3) for p in range(len(pool))]
+    rep = gw.replay(trace, demand_events=demand)
+    return gw, rep, recal
+
+
+class TestClosedLoopSmoke:
+    def test_monitor_fires_and_refits_publish(self, closed_loop_report):
+        _, rep, recal = closed_loop_report
+        assert len(rep.reschedules) >= 1
+        assert recal.refits >= 1
+        assert len(rep.recalibrations) == recal.refits
+
+    def test_lineage_verifies_back_to_root(self, closed_loop_report):
+        _, _, recal = closed_loop_report
+        verify_lineage(recal.lineage)
+        assert recal.lineage[0].parent_hash is None
+        assert len(recal.lineage) == recal.refits + 1
+
+    def test_published_model_adopted_by_every_plan(self, closed_loop_report):
+        gw, _, recal = closed_loop_report
+        for pp in gw.pool:
+            assert pp.scheduler.model is recal.bundle.model
+
+    def test_throttle_engaged_and_requests_gated(self, closed_loop_report):
+        gw, rep, _ = closed_loop_report
+        assert any(a == "throttle" for _, _, a in rep.throttle_events)
+        assert rep.throttled > 0
+        status = gw._rec.status[:gw._rec.n]
+        assert (status == THROTTLED).sum() == rep.throttled
+        assert (status == DONE).sum() == rep.completed
+
+    def test_telemetry_reached_the_window(self, closed_loop_report):
+        _, _, recal = closed_loop_report
+        assert len(recal._window) > 0
+        # every sample carries the injected ext coordinate, stamped at
+        # service start.
+        assert all(e == pytest.approx(0.3)
+                   for _, e, _ in recal._window.samples())
+
+    def test_report_accounting_consistent(self, closed_loop_report):
+        _, rep, _ = closed_loop_report
+        slo = rep.slo_report()
+        assert slo["throttled"] == rep.throttled
+        assert rep.completed + rep.shed + rep.throttled <= rep.n_requests
