@@ -20,7 +20,9 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
-#: artifact name -> (required top-level keys, required per-row keys)
+#: artifact name -> (required top-level keys, required per-row keys[,
+#: extra list sections: {key: required per-entry keys} — the section
+#: itself must exist but may be empty)
 SCHEMAS = {
     "BENCH_simulate.json": (
         {"benchmark", "platform", "max_transitions", "pairs", "candidates",
@@ -31,12 +33,19 @@ SCHEMAS = {
     ),
     "BENCH_search.json": (
         {"benchmark", "platform", "solver", "max_transitions", "pairs",
-         "population", "seed", "repeats", "total_evaluated",
-         "search_cands_per_s", "speedup_vs_jax_eval", "worst_gap_rel",
-         "scenarios", "rows"},
+         "population", "seed", "repeats", "device_count", "host_cores",
+         "total_evaluated", "search_cands_per_s", "speedup_vs_jax_eval",
+         "worst_gap_rel", "scaling", "scenarios", "rows"},
         {"pair", "iterations", "space", "population", "steps", "evaluated",
-         "search_s", "compile_s", "cands_per_s", "objective_ms",
-         "bb_objective_ms", "gap_rel"},
+         "device_count", "search_s", "compile_s", "cands_per_s",
+         "objective_ms", "bb_objective_ms", "gap_rel"},
+        # extra list sections: key -> required per-entry keys ("scaling"
+        # may be empty — populated only by --device-sweep runs).
+        {"scaling": {"devices", "per_device_population", "population",
+                     "steps", "evaluated", "search_s", "cands_per_s",
+                     "worst_gap_rel", "digest", "digest_backend_ok",
+                     "digest_fanout_ok", "digest_chunk_ok",
+                     "speedup_vs_1dev", "digest_invariant"}},
     ),
     "BENCH_gateway.json": (
         {"benchmark", "splits", "tenant_mix", "fleet_tenants", "requests",
@@ -78,7 +87,8 @@ def check(path: pathlib.Path) -> list[str]:
     if schema is None:
         return [f"{path.name}: no schema registered "
                 f"(known: {', '.join(sorted(SCHEMAS))})"]
-    top_required, row_required = schema
+    top_required, row_required = schema[0], schema[1]
+    sections = schema[2] if len(schema) > 2 else {}
     try:
         data = json.loads(path.read_text())
     except (OSError, json.JSONDecodeError) as exc:
@@ -94,6 +104,16 @@ def check(path: pathlib.Path) -> list[str]:
         if missing:
             problems.append(f"{path.name}: rows[{i}] missing "
                             f"{', '.join(sorted(missing))}")
+    for key, entry_required in sections.items():
+        entries = data.get(key)
+        if not isinstance(entries, list):
+            problems.append(f"{path.name}: {key!r} must be a list")
+            continue
+        for i, entry in enumerate(entries):
+            missing = entry_required - set(entry)
+            if missing:
+                problems.append(f"{path.name}: {key}[{i}] missing "
+                                f"{', '.join(sorted(missing))}")
     return problems
 
 

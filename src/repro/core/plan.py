@@ -132,6 +132,10 @@ class ScheduleRequest:
     iterations: tuple[int, ...] = ()
     depends_on: tuple[int | None, ...] = ()
     deadline_s: float | None = None
+    #: extra solver-entry knobs (e.g. anneal's population/devices/
+    #: budget_ms), normalized to a sorted tuple of (name, value) pairs so
+    #: equal requests hash equally however the mapping was spelled.
+    solver_knobs: tuple[tuple[str, Any], ...] = ()
 
     def __post_init__(self):
         if not self.graphs:
@@ -144,6 +148,17 @@ class ScheduleRequest:
                 f"one of {', '.join(OBJECTIVES)}")
         if self.solver != registry.AUTO:
             registry.get_solver(self.solver)   # raises with known names
+        knobs = self.solver_knobs
+        if isinstance(knobs, Mapping):
+            knobs = tuple(knobs.items())
+        knobs = tuple(sorted((str(k), v) for k, v in knobs))
+        for k, v in knobs:
+            if v is not None and not isinstance(v, (bool, int, float, str)):
+                raise ValueError(
+                    f"solver knob {k!r} has non-scalar value {v!r}; "
+                    f"knobs must be JSON scalars")
+        registry.validate_solver_knobs(self.solver, dict(knobs))
+        object.__setattr__(self, "solver_knobs", knobs)
         its = tuple(self.iterations) or (1,) * n
         if len(its) != n:
             raise ValueError(
@@ -179,7 +194,7 @@ class ScheduleRequest:
                     f"{self.platform.name!r}")
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "graphs": [graph_to_dict(g) for g in self.graphs],
             "platform": platform_to_dict(self.platform),
             "model": registry.encode_model(self.model),
@@ -190,6 +205,11 @@ class ScheduleRequest:
             "depends_on": list(self.depends_on),
             "deadline_s": self.deadline_s,
         }
+        # only serialized when set: knob-free requests keep the hash (and
+        # the on-disk cache keys) of every plan minted before this field.
+        if self.solver_knobs:
+            d["solver_knobs"] = dict(self.solver_knobs)
+        return d
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "ScheduleRequest":
@@ -203,6 +223,7 @@ class ScheduleRequest:
             iterations=tuple(d["iterations"]),
             depends_on=tuple(d["depends_on"]),
             deadline_s=d["deadline_s"],
+            solver_knobs=tuple(sorted(d.get("solver_knobs", {}).items())),
         )
 
     def request_hash(self) -> str:

@@ -78,6 +78,10 @@ class SolverEntry:
     #: ascending preference order for ``solver="auto"``.
     priority: int
     description: str = ""
+    #: extra keyword knobs this entry accepts beyond the uniform solver
+    #: signature — the vocabulary :func:`validate_solver_knobs` checks
+    #: ``Scheduler.solve(**knobs)`` pass-throughs against.
+    knobs: tuple[str, ...] = ()
 
 
 _SOLVERS: dict[str, SolverEntry] = {}
@@ -86,6 +90,7 @@ _SOLVERS: dict[str, SolverEntry] = {}
 def register_solver(name: str, *, priority: int = 100,
                     available: Callable[[], bool] = lambda: True,
                     description: str = "",
+                    knobs: tuple[str, ...] = (),
                     replace: bool = False) -> Callable[[SolverFn], SolverFn]:
     """Decorator registering a solver entry under ``name``."""
 
@@ -93,7 +98,8 @@ def register_solver(name: str, *, priority: int = 100,
         if name in _SOLVERS and not replace:
             raise ValueError(f"solver {name!r} already registered")
         _SOLVERS[name] = SolverEntry(name, fn, available, priority,
-                                     description or (fn.__doc__ or ""))
+                                     description or (fn.__doc__ or ""),
+                                     tuple(knobs))
         return fn
 
     return deco
@@ -113,6 +119,29 @@ def get_solver(name: str) -> SolverEntry:
         raise UnknownEntryError(
             f"unknown solver {name!r}; registered solvers: "
             f"{', '.join(solver_names())} (or {AUTO!r})") from None
+
+
+def validate_solver_knobs(solver: str, knobs: Mapping[str, Any]) -> None:
+    """Reject unknown solver knobs up front, listing the valid names.
+
+    Knobs are per-entry vocabulary, so they require a *named* solver:
+    with ``solver="auto"`` the dispatch target (hence the legal knob set)
+    is unknowable before solve time and the combination is refused.
+    """
+    if not knobs:
+        return
+    if solver == AUTO:
+        raise UnknownEntryError(
+            f"solver knobs {sorted(knobs)} require an explicit solver "
+            f"(knob vocabularies are per-entry); pick one of: "
+            f"{', '.join(n for n in solver_names() if _SOLVERS[n].knobs)}")
+    entry = get_solver(solver)
+    unknown = sorted(set(knobs) - set(entry.knobs))
+    if unknown:
+        valid = ", ".join(entry.knobs) if entry.knobs else "none"
+        raise UnknownEntryError(
+            f"unknown knob(s) {unknown} for solver {solver!r}; "
+            f"valid knobs: {valid}")
 
 
 def auto_order() -> tuple[SolverEntry, ...]:
@@ -176,10 +205,19 @@ def _solve_greedy(platform, graphs, model, *, objective, max_transitions,
                                evaluator=evaluator)
 
 
+#: the anneal entry's pass-through knob vocabulary — kept next to the
+#: registration so `Scheduler.solve(**knobs)` validation and the actual
+#: `solver_anneal.solve` signature stay in one reviewable place.
+ANNEAL_KNOBS = ("seed", "population", "steps", "island", "exchange_every",
+                "precision", "backend", "chunk", "devices", "migrate",
+                "fanout", "budget_ms", "cands_per_s")
+
+
 # priority 30: greedy (20) always succeeds, so "auto" never degrades this
 # far — the device search is strictly opt-in via solver="anneal".
 @register_solver("anneal", priority=30,
                  available=lambda: _jax_available(),
+                 knobs=ANNEAL_KNOBS,
                  description="device-resident island annealing over the "
                              "lowered IR (core.search_jax; jax, opt-in)")
 def _solve_anneal(platform, graphs, model, *, objective, max_transitions,

@@ -23,7 +23,7 @@ from __future__ import annotations
 import inspect
 import logging
 import time
-from typing import Sequence
+from typing import Mapping, Sequence
 
 from . import registry
 from .accelerators import PLATFORMS, Platform
@@ -129,8 +129,20 @@ class Scheduler:
                 max_transitions: int | None = 3,
                 iterations: Sequence[int] | None = None,
                 depends_on: Sequence[int | None] | None = None,
-                deadline_s: float | None = None) -> ScheduleRequest:
-        """Build a validated request against this scheduler's platform."""
+                deadline_s: float | None = None,
+                solver_knobs: Mapping | None = None,
+                **knobs) -> ScheduleRequest:
+        """Build a validated request against this scheduler's platform.
+
+        Extra keyword arguments are solver-entry knobs (e.g. anneal's
+        ``population``/``devices``/``budget_ms``); they require an
+        explicit ``solver=`` and are validated against that entry's
+        declared vocabulary — an unknown name raises
+        :class:`~repro.core.registry.UnknownEntryError` listing the valid
+        knobs.
+        """
+        merged = dict(solver_knobs or {})
+        merged.update(knobs)
         return ScheduleRequest(
             graphs=tuple(self.graphs(dnns)),
             platform=self.platform,
@@ -141,6 +153,7 @@ class Scheduler:
             iterations=tuple(iterations or ()),
             depends_on=tuple(depends_on or ()),
             deadline_s=deadline_s,
+            solver_knobs=tuple(sorted(merged.items())),
         )
 
     # ------------------------------------------------------------------
@@ -191,6 +204,9 @@ class Scheduler:
                 # signature keep working; they just search their own way.
                 log.debug("solver %s does not accept evaluator=; skipping",
                           entry.name)
+            # per-entry knobs were validated at request construction
+            # against this entry's declared vocabulary.
+            kwargs.update(dict(request.solver_knobs))
             try:
                 sol = entry.fn(request.platform, list(request.graphs),
                                request.model, **kwargs)

@@ -49,6 +49,7 @@ re-simulates the winner on the host scalar path before any
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
 from typing import Any, Mapping, Sequence
 
@@ -62,6 +63,14 @@ try:
 except ImportError:  # pragma: no cover - the container ships jax
     HAVE_JAX = False
 
+try:  # shard_map is the primary fan-out; pmap is the fallback
+    from jax.experimental.shard_map import shard_map as _shard_map
+    from jax.sharding import Mesh as _Mesh
+    from jax.sharding import PartitionSpec as _PSpec
+    HAVE_SHARD_MAP = True
+except ImportError:  # pragma: no cover - older jax
+    HAVE_SHARD_MAP = False
+
 from .accelerators import Platform
 from .contention import ContentionModel
 from .graph import DNNGraph
@@ -69,6 +78,8 @@ from .lowering import _platform_tables, graph_tables
 from .simulate_jax import _next_pow2, _surface_params, make_event_machine
 
 OBJECTIVES = ("latency", "throughput", "sum_inverse")
+MIGRATIONS = ("auto", "island", "ring")
+FANOUTS = ("auto", "shard_map", "pmap")
 
 #: chains per island — the migration neighborhood.  Must divide both the
 #: population and the chunk so islands never straddle a device call.
@@ -288,19 +299,27 @@ def default_init(tables: SearchTables) -> np.ndarray:
 # the compiled search
 # ---------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=None)
-def _compiled_search(w: int, gmax: int, amax: int, kinds: tuple[str, ...],
-                     obj_kind: str, island: int, backend: str):
-    """One jitted device-resident search per (shape, kinds, objective,
-    island, kernel-backend) layout; population size and dtype
-    re-specialize through jit as usual."""
+def _make_run(w: int, gmax: int, amax: int, kinds: tuple[str, ...],
+              obj_kind: str, island: int, backend: str,
+              migrate: str = "island", ndev: int = 1,
+              axis_name: str | None = None):
+    """The (un-jitted) per-shard search program.
+
+    ``migrate="island"`` is the legacy within-island elite fold;
+    ``"ring"`` additionally donates each island's elite to the *next*
+    island in the global island order at every exchange boundary — the
+    cross-device seam travels by ``lax.ppermute`` over ``axis_name`` when
+    the program runs as one shard of an ``ndev``-device mesh, and wraps
+    locally when ``ndev == 1``.  All migration traffic is pure
+    select/gather of already-computed values, so incumbents are
+    bit-identical across device counts for a fixed total population.
+    """
     from repro.kernels.search import anneal_select
 
     one = make_event_machine(kinds, 1, record=False)
     rows = jnp.arange(w)[:, None]
     cols = jnp.arange(gmax)[None, :]
 
-    @jax.jit
     def run(tb, chain_idx, asg0, seed, n_steps, ex_every, t0, t1):
         dt = tb["dur_t"].dtype
         f32 = jnp.float32
@@ -389,7 +408,8 @@ def _compiled_search(w: int, gmax: int, amax: int, kinds: tuple[str, ...],
             cur, curo, bst, bsto = anneal_select(
                 s["asg"].reshape(P, w * gmax), prop.reshape(P, w * gmax),
                 s["best"].reshape(P, w * gmax), s["obj"], prop_obj,
-                s["best_obj"], u, temp, backend=backend)
+                s["best_obj"], u, temp, backend=backend,
+                global_lanes=P * ndev)
             cur = cur.reshape(P, w, gmax)
             bst = bst.reshape(P, w, gmax)
             # elitist island migration: every ex_every steps the island's
@@ -407,6 +427,26 @@ def _compiled_search(w: int, gmax: int, amax: int, kinds: tuple[str, ...],
             cur_i = jnp.where(repl[..., None, None],
                               elite, cur.reshape(nisl, island, w, gmax))
             obj_i = jnp.where(repl, elite_obj, obj_i)
+            if migrate == "ring":
+                # cross-island ring: island j's worst post-fold member is
+                # replaced by the elite incumbent of island j-1 in the
+                # *global* island order.  Only the seam (the last local
+                # island's elite) crosses devices — a single ppermute —
+                # so the injected values are identical however the global
+                # island order is sharded.
+                seam, seam_obj = elite[-1:], elite_obj[-1:]
+                if axis_name is not None:
+                    perm = [(i, (i + 1) % ndev) for i in range(ndev)]
+                    seam = jax.lax.ppermute(seam, axis_name, perm)
+                    seam_obj = jax.lax.ppermute(seam_obj, axis_name, perm)
+                donor = jnp.concatenate([seam, elite[:-1]], axis=0)
+                donor_obj = jnp.concatenate([seam_obj, elite_obj[:-1]],
+                                            axis=0)
+                dst2 = jnp.argmax(obj_i, axis=1)        # worst after fold
+                repl2 = (jnp.arange(island)[None, :]
+                         == dst2[:, None]) & do
+                cur_i = jnp.where(repl2[..., None, None], donor, cur_i)
+                obj_i = jnp.where(repl2, donor_obj, obj_i)
             return dict(step=step + 1, asg=cur_i.reshape(P, w, gmax),
                         obj=obj_i.reshape(P), best=bst, best_obj=bsto)
 
@@ -414,6 +454,52 @@ def _compiled_search(w: int, gmax: int, amax: int, kinds: tuple[str, ...],
         return out["best_obj"], out["best"]
 
     return run
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_search(w: int, gmax: int, amax: int, kinds: tuple[str, ...],
+                     obj_kind: str, island: int, backend: str):
+    """One jitted device-resident search per (shape, kinds, objective,
+    island, kernel-backend) layout; population size and dtype
+    re-specialize through jit as usual."""
+    return jax.jit(_make_run(w, gmax, amax, kinds, obj_kind, island,
+                             backend))
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_mesh_search(w: int, gmax: int, amax: int,
+                          kinds: tuple[str, ...], obj_kind: str,
+                          island: int, backend: str, devices: int,
+                          migrate: str, fanout: str):
+    """The search fanned out over a 1-D device mesh.
+
+    Returns ``(call_kind, fn)``: ``call_kind`` is ``"flat"`` when ``fn``
+    takes the same globally-shaped arguments as the single-device run
+    (jit / jit-of-shard_map) and ``"pmap"`` when the caller must reshape
+    the sharded arguments to a leading ``devices`` axis.
+    """
+    if devices == 1:
+        # one device needs no collective: the ring seam wraps locally.
+        return "flat", jax.jit(_make_run(w, gmax, amax, kinds, obj_kind,
+                                         island, backend, migrate=migrate))
+    body = _make_run(w, gmax, amax, kinds, obj_kind, island, backend,
+                     migrate=migrate, ndev=devices, axis_name="d")
+    devs = jax.devices()[:devices]
+    if fanout == "shard_map":
+        mesh = _Mesh(np.array(devs), ("d",))
+        sharded = _PSpec("d")
+        repl = _PSpec()
+        fn = _shard_map(
+            body, mesh=mesh,
+            in_specs=(repl, sharded, sharded, repl, repl, repl, repl, repl),
+            out_specs=(sharded, sharded),
+            # while_loop bodies have no replication rule; correctness of
+            # the replicated outputs is by construction (pure per-shard).
+            check_rep=False)
+        return "flat", jax.jit(fn)
+    fn = jax.pmap(body, axis_name="d", devices=devs,
+                  in_axes=(None, 0, 0, None, None, None, None, None))
+    return "pmap", fn
 
 
 # ---------------------------------------------------------------------------
@@ -433,6 +519,97 @@ class SearchOutcome:
     seed: int
     precision: str
     backend: str
+    devices: int | None = None  # mesh width; None = legacy chunked path
+    migrate: str = "island"     # resolved migration topology
+    fanout: str | None = None   # resolved mesh fan-out (shard_map/pmap)
+
+
+def _nearest_multiple(value: int, quantum: int) -> int:
+    """The multiple of ``quantum`` nearest to ``value`` (>= quantum)."""
+    lo = (value // quantum) * quantum
+    hi = lo + quantum
+    if lo < quantum:
+        return hi
+    return lo if (value - lo) <= (hi - value) else hi
+
+
+def _validate_knobs(population: int, island: int, exchange_every: int,
+                    steps: int, chunk: int | None, devices: int | None,
+                    migrate: str, fanout: str) -> tuple[int | None, str, str]:
+    """Fail fast on inconsistent knob combinations.
+
+    Every rejection names the offending knob and the nearest legal value
+    — nothing is silently rounded or truncated.  Returns the resolved
+    ``(chunk, migrate, fanout)``.
+    """
+    if island < 1 or exchange_every < 1 or steps < 0 or population < 1:
+        raise ValueError("population/steps/island/exchange_every must be "
+                         "positive")
+    if island > population:
+        raise ValueError(
+            f"island ({island}) exceeds population ({population}); "
+            f"nearest legal value: island={population}")
+    if population % island:
+        raise ValueError(
+            f"population ({population}) is not a multiple of island "
+            f"({island}); nearest legal value: population="
+            f"{_nearest_multiple(population, island)}")
+    if migrate not in MIGRATIONS:
+        raise ValueError(f"unknown migrate {migrate!r}; "
+                         f"one of {', '.join(MIGRATIONS)}")
+    if fanout not in FANOUTS:
+        raise ValueError(f"unknown fanout {fanout!r}; "
+                         f"one of {', '.join(FANOUTS)}")
+    if devices is not None:
+        if devices < 1:
+            raise ValueError(f"devices ({devices}) must be >= 1")
+        avail = jax.device_count()
+        if devices > avail:
+            raise ValueError(
+                f"devices ({devices}) exceeds the {avail} visible jax "
+                f"device(s); nearest legal value: devices={avail} "
+                f"(emulate more host devices with "
+                f"repro.core.xla_env.apply(devices=N) before jax "
+                f"initializes)")
+        quantum = island * devices
+        if population % quantum:
+            raise ValueError(
+                f"population ({population}) is not a multiple of "
+                f"island*devices ({quantum}); nearest legal value: "
+                f"population={_nearest_multiple(population, quantum)}")
+        if fanout == "shard_map" and not HAVE_SHARD_MAP:
+            raise ValueError("fanout='shard_map' is unavailable in this "
+                             "jax; nearest legal value: fanout='pmap'")
+    else:
+        if fanout != "auto":
+            raise ValueError(
+                f"fanout ({fanout!r}) requires devices=N (the mesh "
+                f"path); nearest legal value: fanout='auto'")
+        if migrate == "ring":
+            raise ValueError(
+                "migrate='ring' requires devices=N: the ring spans the "
+                "global island order, which the legacy chunked path "
+                "processes in separate device calls; nearest legal "
+                "value: migrate='island'")
+    if chunk is not None:
+        if chunk < 1:
+            raise ValueError(f"chunk ({chunk}) must be >= 1")
+        if chunk % island:
+            raise ValueError(
+                f"chunk ({chunk}) must be a multiple of island "
+                f"({island}): islands may not straddle device calls; "
+                f"nearest legal value: chunk="
+                f"{_nearest_multiple(chunk, island)}")
+        if chunk > population:
+            raise ValueError(
+                f"chunk ({chunk}) exceeds population ({population}); "
+                f"nearest legal value: chunk={population}")
+    mig = migrate if migrate != "auto" else (
+        "ring" if devices is not None else "island")
+    fo = fanout
+    if devices is not None and fo == "auto":
+        fo = "shard_map" if HAVE_SHARD_MAP else "pmap"
+    return chunk, mig, fo
 
 
 def anneal_search(
@@ -444,25 +621,39 @@ def anneal_search(
     steps: int = 128,
     island: int = DEFAULT_ISLAND,
     exchange_every: int = 16,
-    chunk: int = DEFAULT_CHUNK,
+    chunk: int | None = None,
     precision: str = "float32",
     backend: str = "auto",
+    devices: int | None = None,
+    migrate: str = "auto",
+    fanout: str = "auto",
     init_assignment: np.ndarray | Sequence[Sequence[str]] | None = None,
     init_objective: float | None = None,
 ) -> SearchOutcome:
     """Run the device-resident annealing/genetic search over ``tables``.
 
-    ``population`` chains (rounded up to a multiple of ``island``) run
-    ``steps`` temperature steps each; ``chunk`` bounds the chains per
-    device call and must be island-aligned.  ``precision="float32"``
-    ranks in single precision (the default — cheap, and the selection
-    order is what matters); ``"x64"`` evaluates in float64 inside a
-    scoped ``enable_x64``.  ``backend`` selects the selection-kernel
-    dispatch (``pallas`` / ``pallas_interpret`` / ``xla`` / ``auto``).
+    ``population`` chains (a multiple of ``island``) run ``steps``
+    temperature steps each; ``chunk`` bounds the chains per device call
+    and must be island-aligned (default: one full-population call, capped
+    at :data:`DEFAULT_CHUNK`).  ``precision="float32"`` ranks in single
+    precision (the default — cheap, and the selection order is what
+    matters); ``"x64"`` evaluates in float64 inside a scoped
+    ``enable_x64``.  ``backend`` selects the selection-kernel dispatch
+    (``pallas`` / ``pallas_interpret`` / ``xla`` / ``auto``).
+
+    ``devices=N`` fans the population out over a 1-D mesh of the first N
+    visible jax devices (``fanout``: ``shard_map`` with a ``pmap``
+    fallback) with ``migrate="ring"`` cross-device elite migration; the
+    incumbent is then bit-identical for a fixed ``(seed, population,
+    island, exchange_every)`` at *any* device count dividing the island
+    count.  ``devices=None`` keeps the legacy sequential-chunk path
+    (``migrate="island"``) byte-for-byte.
 
     The same ``(seed, population, steps, island, exchange_every)`` always
     explores the same chains and returns the bit-identical incumbent
-    regardless of ``chunk`` and selection-kernel backend.
+    regardless of ``chunk``, ``fanout`` and selection-kernel backend.
+    Inconsistent knob combinations raise ``ValueError`` naming the knob
+    and the nearest legal value.
     """
     _require_jax()
     if objective not in OBJECTIVES:
@@ -471,14 +662,12 @@ def anneal_search(
     if precision not in ("x64", "float32"):
         raise ValueError(f"unknown precision {precision!r} "
                          f"(expected 'x64' or 'float32')")
-    if island < 1 or exchange_every < 1 or steps < 0 or population < 1:
-        raise ValueError("population/steps/island/exchange_every must be "
-                         "positive")
-    if chunk % island:
-        raise ValueError(
-            f"chunk ({chunk}) must be a multiple of island ({island}): "
-            f"islands may not straddle device calls")
-    pop = ((population + island - 1) // island) * island
+    chunk, migrate, fanout_r = _validate_knobs(
+        population, island, exchange_every, steps, chunk, devices,
+        migrate, fanout)
+    pop = population
+    if chunk is None:
+        chunk = max(island, min((DEFAULT_CHUNK // island) * island, pop))
 
     if init_assignment is None:
         asg_row = default_init(tables)
@@ -506,42 +695,49 @@ def anneal_search(
     scale = max(scale, 1e-6)
     t0, t1 = 0.1 * scale, 1e-4 * scale
 
-    run = _compiled_search(tables.w, tables.gmax, tables.amax, tables.kinds,
-                           objective, island, backend)
-
     best_objs = np.empty(pop)
     best_rows = np.empty((pop, tables.w, tables.gmax), dtype=np.int64)
 
+    # the compiled program is looked up (and its closure constants
+    # created) OUTSIDE any enable_x64 scope: the lru-cached executable is
+    # shared between precision modes, so its captured index constants
+    # must not inherit the first caller's x64 setting.
+    if devices is None:
+        kind, run = "chunked", _compiled_search(
+            tables.w, tables.gmax, tables.amax, tables.kinds, objective,
+            island, backend)
+    else:
+        kind, run = _compiled_mesh_search(
+            tables.w, tables.gmax, tables.amax, tables.kinds, objective,
+            island, backend, devices, migrate, fanout_r)
+
     def call():
-        tb = {
-            "dur_t": jnp.asarray(tables.dur_t),
-            "dem_t": jnp.asarray(tables.dem_t),
-            "allowed": jnp.asarray(tables.allowed),
-            "n_allowed": jnp.asarray(tables.n_allowed.astype(np.int32)),
-            "legal_after": jnp.asarray(tables.legal_after),
-            "move_ms": jnp.asarray(tables.move_ms),
-            "tau_pair": jnp.asarray(tables.tau_pair),
-            "ngroups": jnp.asarray(tables.ngroups.astype(np.int32)),
-            "iters": jnp.asarray(tables.iters.astype(np.int32)),
-            "dep": jnp.asarray(tables.dep.astype(np.int32)),
-            "arrival": jnp.asarray(tables.arrival),
-            "domshare": jnp.asarray(tables.domshare),
-            "model_of_acc": jnp.asarray(
-                tables.model_of_acc.astype(np.int32)),
-            "max_transitions": jnp.asarray(tables.max_transitions,
-                                           jnp.int32),
-            "surf": tuple(_surface_params(s) for s in tables.surfaces),
-        }
+        tb = _device_tables(tables)
         asg0_full = jnp.asarray(
             _scatter_population(tables, asg_row, pop, seed))
-        for lo in range(0, pop, chunk):
-            hi = min(lo + chunk, pop)
-            bo, br = run(tb, jnp.arange(lo, hi, dtype=jnp.int32),
-                         asg0_full[lo:hi], seed, jnp.asarray(steps,
-                         jnp.int32), jnp.asarray(exchange_every, jnp.int32),
-                         jnp.asarray(float(t0)), jnp.asarray(float(t1)))
-            best_objs[lo:hi] = np.asarray(bo, dtype=np.float64)
-            best_rows[lo:hi] = np.asarray(br)
+        args_tail = (seed, jnp.asarray(steps, jnp.int32),
+                     jnp.asarray(exchange_every, jnp.int32),
+                     jnp.asarray(float(t0)), jnp.asarray(float(t1)))
+        if kind == "chunked":
+            for lo in range(0, pop, chunk):
+                hi = min(lo + chunk, pop)
+                bo, br = run(tb, jnp.arange(lo, hi, dtype=jnp.int32),
+                             asg0_full[lo:hi], *args_tail)
+                best_objs[lo:hi] = np.asarray(bo, dtype=np.float64)
+                best_rows[lo:hi] = np.asarray(br)
+            return
+        chain_idx = jnp.arange(pop, dtype=jnp.int32)
+        if kind == "pmap":
+            per = pop // devices
+            bo, br = run(tb, chain_idx.reshape(devices, per),
+                         asg0_full.reshape(devices, per, tables.w,
+                                           tables.gmax), *args_tail)
+            bo = bo.reshape(pop)
+            br = br.reshape(pop, tables.w, tables.gmax)
+        else:
+            bo, br = run(tb, chain_idx, asg0_full, *args_tail)
+        best_objs[:] = np.asarray(bo, dtype=np.float64)
+        best_rows[:] = np.asarray(br)
 
     if precision == "x64":
         with enable_x64():
@@ -564,4 +760,87 @@ def anneal_search(
         seed=seed,
         precision=precision,
         backend=backend,
+        devices=devices,
+        migrate=migrate,
+        fanout=fanout_r if devices is not None else None,
     )
+
+
+def _device_tables(tables: SearchTables) -> dict:
+    """The frozen problem as the device-side pytree the search consumes."""
+    return {
+        "dur_t": jnp.asarray(tables.dur_t),
+        "dem_t": jnp.asarray(tables.dem_t),
+        "allowed": jnp.asarray(tables.allowed),
+        "n_allowed": jnp.asarray(tables.n_allowed.astype(np.int32)),
+        "legal_after": jnp.asarray(tables.legal_after),
+        "move_ms": jnp.asarray(tables.move_ms),
+        "tau_pair": jnp.asarray(tables.tau_pair),
+        "ngroups": jnp.asarray(tables.ngroups.astype(np.int32)),
+        "iters": jnp.asarray(tables.iters.astype(np.int32)),
+        "dep": jnp.asarray(tables.dep.astype(np.int32)),
+        "arrival": jnp.asarray(tables.arrival),
+        "domshare": jnp.asarray(tables.domshare),
+        "model_of_acc": jnp.asarray(tables.model_of_acc.astype(np.int32)),
+        "max_transitions": jnp.asarray(tables.max_transitions, jnp.int32),
+        "surf": tuple(_surface_params(s) for s in tables.surfaces),
+    }
+
+
+def compile_seconds(
+    tables: SearchTables,
+    *,
+    objective: str = "latency",
+    population: int = 1024,
+    island: int = DEFAULT_ISLAND,
+    backend: str = "auto",
+    precision: str = "float32",
+    devices: int | None = None,
+    migrate: str = "auto",
+    fanout: str = "auto",
+) -> float:
+    """Seconds to trace + lower + XLA-compile one search executable.
+
+    Builds a *fresh* jitted program (bypassing every jit/lru cache) and
+    times an explicit AOT ``lower(...).compile()`` for the exact argument
+    shapes ``anneal_search`` would use — so repeated calls measure the
+    same work and min-of-repeats is meaningful, unlike the legacy
+    ``first_call_s - search_s`` single-sample attribution.
+    """
+    _require_jax()
+    _, mig, fo = _validate_knobs(population, island, 16, 1, None, devices,
+                                 migrate, fanout)
+
+    def aot() -> float:
+        tb = _device_tables(tables)
+        asg0 = jnp.asarray(_scatter_population(
+            tables, default_init(tables), population, 0))
+        args_tail = (0, jnp.asarray(1, jnp.int32), jnp.asarray(1, jnp.int32),
+                     jnp.asarray(1.0), jnp.asarray(1e-3))
+        ndev = devices or 1
+        if devices is not None and ndev > 1 and fo == "shard_map":
+            body = _make_run(tables.w, tables.gmax, tables.amax,
+                             tables.kinds, objective, island, backend,
+                             migrate=mig, ndev=ndev, axis_name="d")
+            mesh = _Mesh(np.array(jax.devices()[:ndev]), ("d",))
+            fn = jax.jit(_shard_map(
+                body, mesh=mesh,
+                in_specs=(_PSpec(), _PSpec("d"), _PSpec("d"), _PSpec(),
+                          _PSpec(), _PSpec(), _PSpec(), _PSpec()),
+                out_specs=(_PSpec("d"), _PSpec("d")),
+                check_rep=False))
+        else:
+            # pmap has no lower()/compile() AOT path; time the
+            # single-shard executable (identical body) as its proxy.
+            fn = jax.jit(_make_run(tables.w, tables.gmax, tables.amax,
+                                   tables.kinds, objective, island, backend,
+                                   migrate=mig))
+        chain_idx = jnp.arange(population, dtype=jnp.int32)
+        t0 = time.perf_counter()
+        fn.lower(tb, chain_idx, asg0, *args_tail).compile()
+        return time.perf_counter() - t0
+
+    if precision == "x64":
+        with enable_x64():
+            return aot()
+    return aot()

@@ -95,13 +95,19 @@ def _pallas_select(cur, prop, best, cur_obj, prop_obj, best_obj, u, temp, *,
 
 
 def anneal_select(cur, prop, best, cur_obj, prop_obj, best_obj, u, temp, *,
-                  backend: str = "auto", block: int = 256):
+                  backend: str = "auto", block: int = 256,
+                  global_lanes: int | None = None):
     """Metropolis accept + per-chain incumbent update over (P, L) rows.
 
     Semantics (and the reference oracle) live in
     :func:`repro.kernels.ref.anneal_select`; this wrapper dispatches the
     same decision to a blocked Pallas kernel or the fused XLA form.
-    Returns ``(new_cur, new_cur_obj, new_best, new_best_obj)``.
+    ``global_lanes`` is the population across *all* mesh shards — under
+    ``shard_map`` each device sees only its slice of the chain axis, and
+    the ``auto`` big-population threshold must be judged on the global
+    lane count so backend choice (hence bit-identity) does not change
+    with device count.  Returns ``(new_cur, new_cur_obj, new_best,
+    new_best_obj)``.
     """
     cur = jnp.asarray(cur)
     cur_obj = jnp.asarray(cur_obj)
@@ -112,7 +118,7 @@ def anneal_select(cur, prop, best, cur_obj, prop_obj, best_obj, u, temp, *,
     temp = jnp.asarray(temp, dt)
     b = backend
     if b == "auto":
-        big = cur.shape[0] >= _MIN_PALLAS_CHAINS
+        big = (global_lanes or cur.shape[0]) >= _MIN_PALLAS_CHAINS
         b = "pallas" if (jax.default_backend() == "tpu" and big) else "xla"
     if b in ("xla", "ref"):
         return _ref_select(cur, jnp.asarray(prop), jnp.asarray(best),

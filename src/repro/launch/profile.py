@@ -116,6 +116,44 @@ def _jax_bundle(args, timer):
     return bundle, None
 
 
+def _measure_search_throughput(args, bundle):
+    """Record this host's measured anneal-search candidates/s in the
+    bundle provenance, so later ``budget_ms`` solves from the artifact
+    skip the live probe.  Skipped quietly when the bundle's contention
+    model has no lowerable surface (the search itself would refuse too).
+    """
+    import dataclasses
+
+    from repro.core import solver_anneal
+    try:
+        cps = solver_anneal.measure_search_throughput(
+            bundle.platform, list(bundle.graphs), bundle.model,
+            max_transitions=args.max_transitions, devices=args.devices)
+    except (ValueError, RuntimeError) as exc:
+        print(f"(search-throughput probe skipped: {exc})")
+        return bundle
+    print(f"measured anneal-search throughput: {cps:,.0f} candidates/s"
+          + (f" on {args.devices} device(s)" if args.devices else ""))
+    prov = {**bundle.provenance, "search_cands_per_s": float(cps)}
+    if args.devices:
+        prov["search_devices"] = int(args.devices)
+    return dataclasses.replace(bundle, provenance=prov)
+
+
+def _anneal_knobs(args, bundle) -> dict:
+    knobs = {}
+    if args.solver != "anneal":
+        return knobs
+    if args.devices:
+        knobs["devices"] = args.devices
+    if args.search_budget_ms:
+        knobs["budget_ms"] = args.search_budget_ms
+        cps = bundle.provenance.get("search_cands_per_s")
+        if cps:
+            knobs["cands_per_s"] = float(cps)
+    return knobs
+
+
 def _solve_from_bundle(args, bundle, vsoc) -> int:
     from repro import profiling
 
@@ -123,10 +161,11 @@ def _solve_from_bundle(args, bundle, vsoc) -> int:
     if len(bundle.platform.names) < 2:
         print("(platform has one accelerator: nothing to co-schedule)")
         return 0
+    knobs = _anneal_knobs(args, bundle)
     plan = sched.solve(list(bundle.graphs), args.objective,
                        solver=args.solver,
                        max_transitions=args.max_transitions,
-                       deadline_s=20.0)
+                       deadline_s=20.0, solver_knobs=knobs)
     print("solved from measured bundle:")
     print(plan.summary())
     if vsoc is not None:
@@ -134,7 +173,8 @@ def _solve_from_bundle(args, bundle, vsoc) -> int:
         truth_model = next(iter(vsoc.models.values()))
         truth = Scheduler(vsoc.platform, model=truth_model).solve(
             list(vsoc.graphs.values()), args.objective, solver=args.solver,
-            max_transitions=args.max_transitions, deadline_s=20.0)
+            max_transitions=args.max_transitions, deadline_s=20.0,
+            solver_knobs=knobs)
         rel = (abs(plan.objective - truth.objective)
                / max(abs(truth.objective), 1e-12))
         print(f"generating-model objective={truth.objective:.4f}  "
@@ -197,7 +237,25 @@ def main(argv=None) -> int:
     ap.add_argument("--max-transitions", type=int, default=2)
     ap.add_argument("--solve-tolerance", type=float, default=0.05,
                     help="max generating-vs-measured objective deviation")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="fan --solver anneal solves over N devices "
+                         "(emulated on CPU hosts via "
+                         "--xla_force_host_platform_device_count, applied "
+                         "before jax initializes)")
+    ap.add_argument("--search-budget-ms", type=float, default=None,
+                    metavar="MS",
+                    help="wall-clock budget per anneal solve: population/"
+                         "steps auto-tune from the bundle-measured search "
+                         "throughput (recorded in provenance as "
+                         "search_cands_per_s); requires --solver anneal")
     args = ap.parse_args(argv)
+
+    if (args.devices or args.search_budget_ms) and args.solver != "anneal":
+        ap.error("--devices/--search-budget-ms tune the device-resident "
+                 "search; they require --solver anneal")
+    if args.devices:
+        from repro.core import xla_env
+        xla_env.apply(devices=args.devices)
 
     if args.fit is None:
         args.fit = "piecewise" if args.executor == "virtual" \
@@ -209,6 +267,9 @@ def main(argv=None) -> int:
     else:
         bundle, vsoc = _jax_bundle(args, timer)
         default_out = f"artifacts/profiles/{args.arch}.json"
+
+    if args.solver == "anneal" and len(bundle.platform.names) >= 2:
+        bundle = _measure_search_throughput(args, bundle)
 
     path = bundle.save(args.out or default_out)
     # reload immediately: the tamper check re-verifies the content hash,

@@ -39,6 +39,16 @@ from repro.models import build
 from repro.serve.engine import ServingEngine
 
 
+def _solver_knobs(args) -> tuple:
+    """--devices/--search-budget-ms as GatewayConfig.solver_knobs pairs."""
+    knobs = {}
+    if args.devices:
+        knobs["devices"] = args.devices
+    if args.search_budget_ms:
+        knobs["budget_ms"] = args.search_budget_ms
+    return tuple(sorted(knobs.items()))
+
+
 def _run_gateway(args) -> int:
     from repro.core.accelerators import tpu_pod_split
     from repro.core.plan import Plan
@@ -66,7 +76,8 @@ def _run_gateway(args) -> int:
               f"measured platform {platform.name} with calibrated "
               f"{type(model).__name__}")
     gcfg = GatewayConfig(platform=platform, model=model,
-                         memory_budget_bytes=budget, solver=args.solver)
+                         memory_budget_bytes=budget, solver=args.solver,
+                         solver_knobs=_solver_knobs(args))
     scheduler = Scheduler(gcfg.platform, gcfg.model,
                           evaluator=args.evaluator)
     if args.plan:
@@ -145,7 +156,8 @@ def _run_fleet(args) -> int:
     budget = (args.budget_slots * max(s.kv_bytes_per_slot for s in specs)
               if args.budget_slots else None)
     pool = build_pool(specs, plats,
-                      GatewayConfig(solver=args.solver, model=model),
+                      GatewayConfig(solver=args.solver, model=model,
+                                    solver_knobs=_solver_knobs(args)),
                       cache, slots=8)
     solves = sum(pp.scheduler.solves for pp in pool)
     print(f"pool: {len(pool)} plans, {solves} solver invocation(s)")
@@ -251,6 +263,19 @@ def main(argv=None):
                          "annealing over the lowered IR; requires jax) | "
                          "auto = best available by priority. Unknown names "
                          "fail listing the registered solvers.")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="fan the anneal search over N devices "
+                         "(shard_map mesh with ring elite migration). "
+                         "Applied as --xla_force_host_platform_device_count "
+                         "before jax initializes, so CPU-only hosts emulate "
+                         "an N-device mesh; requires --solver anneal")
+    ap.add_argument("--search-budget-ms", type=float, default=None,
+                    metavar="MS",
+                    help="wall-clock budget for each fresh anneal solve: "
+                         "population/steps are auto-tuned from the problem "
+                         "size, --devices, and measured search throughput "
+                         "instead of fixed defaults; requires --solver "
+                         "anneal")
     ap.add_argument("--evaluator", default="auto", metavar="NAME",
                     help="candidate-schedule evaluator for any fresh solve: "
                          "a registered evaluator name (batch = vectorized "
@@ -259,6 +284,15 @@ def main(argv=None):
                          "auto = best available, currently batch). Unknown "
                          "names fail listing the registered evaluators.")
     args = ap.parse_args(argv)
+
+    if (args.devices or args.search_budget_ms) and args.solver != "anneal":
+        ap.error("--devices/--search-budget-ms tune the device-resident "
+                 "search; they require --solver anneal")
+    if args.devices:
+        # before any jax device use: the emulated-device-count flag is
+        # read once, at backend initialization.
+        from repro.core import xla_env
+        xla_env.apply(devices=args.devices)
 
     if args.solver != "auto":
         from repro.core import registry

@@ -101,6 +101,10 @@ class GatewayConfig:
     #: registry solver entry planning the schedule ("auto" = z3 -> bb ->
     #: greedy; "anneal" opts into the device-resident search).
     solver: str = "auto"
+    #: extra knobs for the named solver entry as sorted (name, value)
+    #: pairs — e.g. anneal's ``devices``/``budget_ms``; validated against
+    #: the entry's declared vocabulary at request construction.
+    solver_knobs: tuple = ()
     max_transitions: int = 2
     #: layer-group granularity of the phase graphs (body groups per phase).
     body_groups: int = 2
@@ -241,7 +245,8 @@ def plan_gateway(specs: Sequence[TenantSpec],
     plan = sched.resolve(sched.request(
         graphs, gcfg.objective, solver=gcfg.solver,
         max_transitions=gcfg.max_transitions,
-        iterations=its, deadline_s=deadline_s))
+        iterations=its, deadline_s=deadline_s,
+        solver_knobs=dict(gcfg.solver_knobs)))
     sol = plan.solution
     # re-simulate with the timeline recorded — predicted per-step latencies
     # are read off the decode-group intervals.

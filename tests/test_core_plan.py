@@ -66,6 +66,74 @@ class TestScheduleRequest:
 
 
 # ---------------------------------------------------------------------------
+# solver knobs (per-entry pass-through vocabulary)
+# ---------------------------------------------------------------------------
+
+class TestSolverKnobs:
+    def test_mapping_and_kwargs_forms_normalize_identically(self):
+        sched = small_scheduler()
+        r1 = sched.request(DNNS, solver="anneal", max_transitions=1,
+                           solver_knobs={"devices": 2, "budget_ms": 50.0})
+        r2 = sched.request(DNNS, solver="anneal", max_transitions=1,
+                           budget_ms=50.0, devices=2)
+        assert r1.solver_knobs == (("budget_ms", 50.0), ("devices", 2))
+        assert r1.request_hash() == r2.request_hash()
+
+    def test_knobs_change_the_request_hash(self):
+        sched = small_scheduler()
+        bare = sched.request(DNNS, solver="anneal", max_transitions=1)
+        knobbed = sched.request(DNNS, solver="anneal", max_transitions=1,
+                                population=512)
+        assert bare.request_hash() != knobbed.request_hash()
+
+    def test_knob_free_serialization_is_back_compat(self):
+        # pre-knob artifacts hash without a solver_knobs key; knob-free
+        # requests must keep emitting (and hashing) the same document.
+        sched = small_scheduler()
+        bare = small_request(sched)
+        assert "solver_knobs" not in bare.to_dict()
+        knobbed = sched.request(DNNS, solver="anneal", max_transitions=1,
+                                population=512)
+        assert knobbed.to_dict()["solver_knobs"] == {"population": 512}
+
+    def test_round_trips_through_plan_artifact(self):
+        sched = small_scheduler()
+        req = sched.request(DNNS, solver="anneal", max_transitions=1,
+                            population=256, steps=8, island=8)
+        back = ScheduleRequest.from_dict(json.loads(
+            json.dumps(req.to_dict())))
+        assert back.solver_knobs == req.solver_knobs
+        assert back.request_hash() == req.request_hash()
+
+    def test_unknown_knob_lists_valid_names(self):
+        with pytest.raises(registry.UnknownEntryError,
+                           match="population"):
+            small_scheduler().request(DNNS, solver="anneal",
+                                      max_transitions=1, temperature=3)
+
+    def test_knobs_with_auto_solver_refused(self):
+        with pytest.raises(registry.UnknownEntryError, match="explicit"):
+            small_scheduler().request(DNNS, population=512)
+
+    def test_non_scalar_knob_value_rejected(self):
+        with pytest.raises(ValueError, match="scalar"):
+            small_scheduler().request(DNNS, solver="anneal",
+                                      max_transitions=1,
+                                      population=[512])
+
+    @pytest.mark.skipif(not registry.get_solver("anneal").available(),
+                        reason="jax not installed")
+    def test_knobs_reach_the_solver_and_its_provenance(self):
+        sched = small_scheduler()
+        plan = sched.solve(DNNS, solver="anneal", max_transitions=1,
+                           population=64, steps=8, island=8,
+                           evaluator="batch")
+        assert plan.solver_params["population"] == 64
+        assert plan.solver_params["steps"] == 8
+        assert plan.solver_params["island"] == 8
+
+
+# ---------------------------------------------------------------------------
 # Plan serialization
 # ---------------------------------------------------------------------------
 

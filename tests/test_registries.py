@@ -40,6 +40,27 @@ class TestSolverRegistry:
         assert (registry.get_solver("greedy").priority
                 < registry.get_solver("anneal").priority)
 
+    def test_anneal_declares_its_knob_vocabulary(self):
+        entry = registry.get_solver("anneal")
+        for knob in ("population", "devices", "budget_ms", "fanout"):
+            assert knob in entry.knobs
+
+    def test_unknown_knob_lists_the_vocabulary(self):
+        with pytest.raises(UnknownEntryError) as ei:
+            registry.validate_solver_knobs("anneal", {"temperature": 3})
+        msg = str(ei.value)
+        assert "temperature" in msg
+        for knob in registry.get_solver("anneal").knobs:
+            assert knob in msg
+
+    def test_knobs_on_knobless_solver_rejected(self):
+        with pytest.raises(UnknownEntryError, match="none"):
+            registry.validate_solver_knobs("bb", {"population": 512})
+
+    def test_knobs_with_auto_name_solvers_that_accept_knobs(self):
+        with pytest.raises(UnknownEntryError, match="anneal"):
+            registry.validate_solver_knobs("auto", {"population": 512})
+
 
 class TestEvaluatorRegistry:
     def test_unknown_name_lists_registered(self):

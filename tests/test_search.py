@@ -310,6 +310,19 @@ class TestValidation:
         with pytest.raises(ValueError, match="island"):
             search_jax.anneal_search(tables, island=32, chunk=48)
 
+    def test_island_exceeding_population_names_nearest_legal(self, tables):
+        with pytest.raises(ValueError, match="island=16"):
+            search_jax.anneal_search(tables, population=16, island=32)
+
+    def test_population_island_remainder_names_nearest_legal(self, tables):
+        with pytest.raises(ValueError, match="population=96"):
+            search_jax.anneal_search(tables, population=100, island=32)
+
+    def test_chunk_exceeding_population_names_nearest_legal(self, tables):
+        with pytest.raises(ValueError, match="chunk=64"):
+            search_jax.anneal_search(tables, population=64, island=32,
+                                     chunk=96)
+
     def test_rejects_illegal_init(self, tables):
         bad = np.zeros((tables.w, tables.gmax), dtype=np.int32)
         bad[0, 0] = 1  # transition budget: 3 groups alternating GPU/DLA
