@@ -57,6 +57,7 @@ import time
 import numpy as np
 
 from repro.core import Scheduler, search_jax, solver_anneal, xla_env
+from repro.obs import Tracer, set_tracer
 from repro.core.simulate import Workload, simulate
 from repro.core.solver_bb import enumerate_assignments
 from repro.core.profiles import DNN_SET
@@ -118,11 +119,20 @@ def run_pairs(sched: Scheduler, pairs, population: int, seed: int,
         # compile attribution: an explicit AOT lower+compile of a fresh
         # executable, min-of-repeats — first_call_s - search_s is a
         # single sample and reads ~0 for every pair after the first in a
-        # (w, gmax, amax) shape bucket (jit cache hit).
-        t_compile, _ = _best_of(
-            lambda: search_jax.compile_seconds(
-                tables, objective="latency", population=population),
-            repeats)
+        # (w, gmax, amax) shape bucket (jit cache hit).  compile_seconds
+        # measures internally (a "search.compile" trace span + the
+        # search_compile_s gauge), so read the instrumented samples off
+        # the tracer instead of re-timing the call from outside.
+        tr = Tracer()
+        prev = set_tracer(tr)
+        try:
+            for _ in range(max(1, repeats)):
+                search_jax.compile_seconds(tables, objective="latency",
+                                           population=population)
+        finally:
+            set_tracer(prev)
+        t_compile = min(e["args"]["compile_s"] for e in tr.events()
+                        if e["name"] == "search.compile")
 
         # scalar re-simulation is authoritative for the reported quality
         wls = [Workload(g, asg, iterations=it)

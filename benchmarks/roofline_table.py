@@ -10,16 +10,20 @@ from __future__ import annotations
 import json
 import pathlib
 
+from repro.obs import get_logger
+
 from .common import emit, fmt_table
 
 ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
 DRYRUN_DIR = ARTIFACTS / "dryrun"
 
+log = get_logger(__name__)
+
 
 def main() -> list[dict]:
     if not DRYRUN_DIR.exists():
-        print("\n== Roofline: no dry-run artifacts yet "
-              "(run: PYTHONPATH=src python -m repro.launch.dryrun) ==")
+        log.warning("roofline: no dry-run artifacts yet (run: "
+                    "PYTHONPATH=src python -m repro.launch.dryrun)")
         emit("roofline.missing", 0.0, "run_dryrun_first")
         return []
     rows, out = [], []

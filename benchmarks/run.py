@@ -16,7 +16,11 @@ import sys
 import time
 import traceback
 
+from repro.obs import configure_logging, get_logger
+
 ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
+
+log = get_logger(__name__)
 
 SUITES = [
     "table2_characterization",
@@ -34,6 +38,7 @@ SUITES = [
 
 def main(argv: list[str] | None = None) -> int:
     args = argv if argv is not None else sys.argv[1:]
+    configure_logging("info")
     selected = [s for s in SUITES if not args or any(a in s for a in args)]
     ARTIFACTS.mkdir(exist_ok=True)
     results: dict[str, object] = {}
@@ -47,8 +52,7 @@ def main(argv: list[str] | None = None) -> int:
             results[name] = mod.main()
         except Exception:
             failures.append(name)
-            print(f"[FAIL] {mod_name}:\n{traceback.format_exc()}",
-                  file=sys.stderr)
+            log.error("[FAIL] %s:\n%s", mod_name, traceback.format_exc())
         print(f"# {name} finished in {time.perf_counter() - t0:.1f}s\n")
     out = ARTIFACTS / "bench_results.json"
     out.write_text(json.dumps(results, indent=1, default=str))

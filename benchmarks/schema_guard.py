@@ -68,6 +68,15 @@ SCHEMAS = {
          "p99_ms", "slo_p99_violations", "served_tenants", "reschedules",
          "recalibrations", "throttle_events", "replay_s"},
     ),
+    "BENCH_obs.json": (
+        {"benchmark", "requests", "repeats", "seed", "trace_hash",
+         "disabled_ns_per_span", "replay_disabled_s", "replay_traced_s",
+         "overhead_pct", "overhead_gate_pct", "overhead_gated",
+         "export_s", "exported_spans", "trace_events", "trace_bytes",
+         "determinism_requests", "determinism_ok", "rows"},
+        {"mode", "replay_s", "replay_req_per_s", "events",
+         "exported_spans"},
+    ),
     "BENCH_profile.json": (
         {"benchmark", "worst_fit_max_rel_err", "worst_vs_generating",
          "worst_objective_rel_diff", "rows"},
@@ -82,8 +91,13 @@ REQUIRED = ("BENCH_simulate.json",)
 
 
 def check(path: pathlib.Path) -> list[str]:
-    """Problems with one artifact ([] = schema holds)."""
-    schema = SCHEMAS.get(path.name)
+    """Problems with one artifact ([] = schema holds).
+
+    CI smoke runs write reduced-size artifacts named
+    ``BENCH_<x>_smoke.json``; they are held to the same schema as the
+    committed ``BENCH_<x>.json``.
+    """
+    schema = SCHEMAS.get(path.name.replace("_smoke.json", ".json"))
     if schema is None:
         return [f"{path.name}: no schema registered "
                 f"(known: {', '.join(sorted(SCHEMAS))})"]

@@ -15,8 +15,11 @@ from __future__ import annotations
 from repro.core import Scheduler
 from repro.core.profiles import chain, get_graph
 from repro.core.scheduler import failed
+from repro.obs import get_logger
 
 from .common import emit, fmt_table, timed
+
+log = get_logger(__name__)
 
 #: exp no -> (platform, objective, dnn spec, scenario, paper impr lat%, fps%)
 EXPERIMENTS = {
@@ -103,8 +106,8 @@ def main() -> list[dict]:
                     "opt" if r["optimal"] else "time",
                     f"{r['solver']}:{r['solve_s']:.1f}s"])
         for name, err in r["baseline_errors"].items():
-            print(f"  exp{no}: baseline {name} failed "
-                  f"({err['type']}): {err['message']}")
+            log.warning("exp%s: baseline %s failed (%s): %s",
+                        no, name, err["type"], err["message"])
         emit(f"table6.exp{no}", r["solver_s"] * 1e6,
              f"lat_impr={r['lat_impr']:.1f}%;paper={r['paper_lat_impr']}%;"
              f"fps_impr={r['fps_impr']:.1f}%;paper_fps={r['paper_fps_impr']}%")

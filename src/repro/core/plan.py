@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import hashlib
 import json
-import logging
 import pathlib
 import time
 from dataclasses import dataclass, field
@@ -38,8 +37,9 @@ from .contention import ContentionModel
 from .graph import DNNGraph, LayerGroup
 from .simulate import Interval, SimResult, Workload
 from .solver_bb import Solution
+from ..obs import get_logger, get_registry, get_tracer
 
-log = logging.getLogger("repro.core.plan")
+log = get_logger(__name__)
 
 FORMAT = 1
 OBJECTIVES = ("latency", "throughput", "sum_inverse")
@@ -447,6 +447,7 @@ class PlanCache:
         return self.root / f"plan-{request_hash[:16]}.json"
 
     def get(self, request_hash: str) -> Plan | None:
+        tier = "mem"
         plan = self._mem.get(request_hash)
         if plan is not None:
             # LRU: a hit refreshes recency so hot plans survive eviction.
@@ -455,6 +456,7 @@ class PlanCache:
         else:
             path = self.path_for(request_hash)
             if path is not None and path.exists():
+                tier = "disk"
                 try:
                     plan = Plan.load(path)
                 except (OSError, ValueError, TypeError, KeyError,
@@ -465,19 +467,35 @@ class PlanCache:
                     # cache for every later process.
                     log.warning("ignoring unreadable plan cache file %s "
                                 "(%s); re-solving", path, exc)
+                    tier = "corrupt"
                     plan = None
                 else:
                     if plan.request_hash != request_hash:
                         log.warning(
                             "cache file %s holds plan %s, not %s; ignoring",
                             path, plan.request_hash[:12], request_hash[:12])
+                        tier = "wrong_hash"
                         plan = None
                 if plan is not None:
                     self._insert(plan)
+                if tier in ("corrupt", "wrong_hash"):
+                    # rare by construction: worth a trace instant + counter
+                    # so a degrading store is visible before it hurts p99.
+                    get_tracer().instant("plan_cache.degrade", "cache",
+                                         reason=tier, request=request_hash[:12])
+                    get_registry().counter(
+                        "plan_cache_degraded",
+                        "disk plan-cache entries degraded to a miss").labels(
+                            reason=tier).inc()
         if plan is None:
             self.misses += 1
+            get_registry().counter(
+                "plan_cache_misses", "plan cache lookups that missed").inc()
             return None
         self.hits += 1
+        get_registry().counter(
+            "plan_cache_hits", "plan cache lookups that hit").labels(
+                tier=tier).inc()
         return plan
 
     def add(self, plan: Plan) -> None:
@@ -557,6 +575,9 @@ class ShardedPlanCache(PlanCache):
         for stale in entries[:max(0, len(entries) - budget)]:
             try:
                 stale.unlink()
+                get_registry().counter(
+                    "plan_cache_evictions",
+                    "persisted plans evicted by shard trimming").inc()
                 log.info("evicted plan cache file %s (shard over budget)",
                          stale)
             except OSError:                    # concurrent eviction lost the race

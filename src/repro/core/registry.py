@@ -24,7 +24,6 @@ built-ins.
 """
 from __future__ import annotations
 
-import logging
 import re
 from collections import abc as _abc
 from dataclasses import dataclass
@@ -36,6 +35,7 @@ from . import solver_bb, solver_greedy, solver_z3
 from .contention import PiecewiseModel, ProportionalShareModel
 from .simulate import SimResult, Workload, simulate
 from .solver_bb import Solution
+from ..obs import get_logger
 
 AUTO = "auto"
 #: evaluator auto-selection sentinel (same spelling as the solver knob).
@@ -417,7 +417,7 @@ def contention_model_names() -> tuple[str, ...]:
 #: and caches in-process, but the artifact refuses to deserialize.
 OPAQUE_MODEL = "opaque"
 
-_log = logging.getLogger("repro.core.registry")
+_log = get_logger(__name__)
 _OPAQUE_WARNED: set[str] = set()
 
 

@@ -21,7 +21,6 @@ shims over one shared Scheduler per (platform, model).
 from __future__ import annotations
 
 import inspect
-import logging
 import time
 from typing import Mapping, Sequence
 
@@ -32,8 +31,9 @@ from .graph import DNNGraph
 from .plan import (Plan, PlanCache, ScheduleRequest, platform_fingerprint)
 from .profiles import get_graph
 from .simulate import SimResult, Workload, simulate, validate_assignment
+from ..obs import get_logger, get_registry, get_tracer
 
-log = logging.getLogger("repro.core.scheduler")
+log = get_logger(__name__)
 
 #: calibrated default for the SoC EMC domains — reproduces the paper's
 #: observed co-run slowdown magnitudes (up to ~70% performance loss, §5.2)
@@ -167,25 +167,39 @@ class Scheduler:
         solved, so it does not participate in the request hash.
         """
         h = request.request_hash()
-        plan = self.cache.get(h)
-        if plan is not None:
-            log.info("plan cache hit %s (solver=%s, %.3fs solve amortized)",
-                     h[:12], plan.solver, plan.solve_time_s)
+        with get_tracer().span("scheduler.resolve", "solve",
+                               request=h[:12]) as sp:
+            plan = self.cache.get(h)
+            if plan is not None:
+                sp.set(cache="hit", solver=plan.solver)
+                get_registry().counter(
+                    "scheduler_cache_hits",
+                    "resolve() calls served from the plan cache").inc()
+                log.info(
+                    "plan cache hit %s (solver=%s, %.3fs solve amortized)",
+                    h[:12], plan.solver, plan.solve_time_s)
+                return plan
+            ev = registry.resolve_evaluator(evaluator or self.evaluator).name
+            kind, sol, dt = self._dispatch(request, ev)
+            self.solves += 1
+            sp.set(cache="miss", solver=kind, evaluator=ev,
+                   objective=request.objective,
+                   objective_value=sol.objective, solve_s=round(dt, 6))
+            get_registry().counter(
+                "scheduler_solves",
+                "resolve() calls that reached a solver").inc()
+            plan = Plan(request=request, solution=sol, solver=kind,
+                        solve_time_s=dt, request_hash=h,
+                        platform_fingerprint=platform_fingerprint(
+                            request.platform),
+                        evaluator=ev,
+                        # getattr: third-party Solutions may predate params.
+                        solver_params=dict(getattr(sol, "params", {}) or {}))
+            self.cache.put(plan)
+            log.info("solved %s with %s/%s in %.3fs (%s=%.6g, optimal=%s)",
+                     h[:12], kind, ev, dt, sol.kind, sol.objective,
+                     sol.optimal)
             return plan
-        ev = registry.resolve_evaluator(evaluator or self.evaluator).name
-        kind, sol, dt = self._dispatch(request, ev)
-        self.solves += 1
-        plan = Plan(request=request, solution=sol, solver=kind,
-                    solve_time_s=dt, request_hash=h,
-                    platform_fingerprint=platform_fingerprint(
-                        request.platform),
-                    evaluator=ev,
-                    # getattr: third-party Solutions may predate params.
-                    solver_params=dict(getattr(sol, "params", {}) or {}))
-        self.cache.put(plan)
-        log.info("solved %s with %s/%s in %.3fs (%s=%.6g, optimal=%s)",
-                 h[:12], kind, ev, dt, sol.kind, sol.objective, sol.optimal)
-        return plan
 
     def _dispatch(self, request: ScheduleRequest, evaluator: str):
         errors = []
@@ -208,8 +222,10 @@ class Scheduler:
             # against this entry's declared vocabulary.
             kwargs.update(dict(request.solver_knobs))
             try:
-                sol = entry.fn(request.platform, list(request.graphs),
-                               request.model, **kwargs)
+                with get_tracer().span(f"solver.{entry.name}", "solve",
+                                       objective=request.objective):
+                    sol = entry.fn(request.platform, list(request.graphs),
+                                   request.model, **kwargs)
             except ValueError as exc:
                 # e.g. exhaustive search space too large: degrade down the
                 # registry's priority order (z3 -> bb -> greedy).

@@ -76,6 +76,7 @@ from .contention import ContentionModel
 from .graph import DNNGraph
 from .lowering import _platform_tables, graph_tables
 from .simulate_jax import _next_pow2, _surface_params, make_event_machine
+from ..obs import get_registry, get_tracer
 
 OBJECTIVES = ("latency", "throughput", "sum_inverse")
 MIGRATIONS = ("auto", "island", "ring")
@@ -711,6 +712,8 @@ def anneal_search(
             tables.w, tables.gmax, tables.amax, tables.kinds, objective,
             island, backend, devices, migrate, fanout_r)
 
+    tracer = get_tracer()
+
     def call():
         tb = _device_tables(tables)
         asg0_full = jnp.asarray(
@@ -719,37 +722,71 @@ def anneal_search(
                      jnp.asarray(exchange_every, jnp.int32),
                      jnp.asarray(float(t0)), jnp.asarray(float(t1)))
         if kind == "chunked":
-            for lo in range(0, pop, chunk):
+            incumbent = np.inf
+            for ci, lo in enumerate(range(0, pop, chunk)):
                 hi = min(lo + chunk, pop)
-                bo, br = run(tb, jnp.arange(lo, hi, dtype=jnp.int32),
-                             asg0_full[lo:hi], *args_tail)
-                best_objs[lo:hi] = np.asarray(bo, dtype=np.float64)
-                best_rows[lo:hi] = np.asarray(br)
+                # chunk 0 pays any outstanding jit compile for this
+                # (shape, objective, backend) — later chunks reuse the
+                # executable, so their spans are pure steady state.
+                with tracer.span("anneal.chunk", "search", chunk=ci,
+                                 lo=lo, hi=hi,
+                                 includes_compile=(ci == 0)) as sp:
+                    bo, br = run(tb, jnp.arange(lo, hi, dtype=jnp.int32),
+                                 asg0_full[lo:hi], *args_tail)
+                    best_objs[lo:hi] = np.asarray(bo, dtype=np.float64)
+                    best_rows[lo:hi] = np.asarray(br)
+                if tracer.enabled:
+                    chunk_objs = best_objs[lo:hi]
+                    finite = chunk_objs[np.isfinite(chunk_objs)]
+                    # per-move acceptance stays on-device; the fraction
+                    # of chains that ended strictly better than the seed
+                    # schedule is the host-visible acceptance proxy
+                    # (feasible fraction when no seed objective is known).
+                    if init_objective is not None and np.isfinite(
+                            init_objective):
+                        accepted = int((finite < init_objective).sum())
+                    else:
+                        accepted = int(finite.size)
+                    sp.set(accept_rate=round(accepted / (hi - lo), 4))
+                    if finite.size and float(finite.min()) < incumbent:
+                        incumbent = float(finite.min())
+                        tracer.instant(
+                            "anneal.incumbent", "search",
+                            objective=incumbent,
+                            chain=int(lo + np.argmin(best_objs[lo:hi])))
             return
         chain_idx = jnp.arange(pop, dtype=jnp.int32)
-        if kind == "pmap":
-            per = pop // devices
-            bo, br = run(tb, chain_idx.reshape(devices, per),
-                         asg0_full.reshape(devices, per, tables.w,
-                                           tables.gmax), *args_tail)
-            bo = bo.reshape(pop)
-            br = br.reshape(pop, tables.w, tables.gmax)
+        with tracer.span("anneal.mesh", "search", fanout=kind,
+                         devices=devices):
+            if kind == "pmap":
+                per = pop // devices
+                bo, br = run(tb, chain_idx.reshape(devices, per),
+                             asg0_full.reshape(devices, per, tables.w,
+                                               tables.gmax), *args_tail)
+                bo = bo.reshape(pop)
+                br = br.reshape(pop, tables.w, tables.gmax)
+            else:
+                bo, br = run(tb, chain_idx, asg0_full, *args_tail)
+            best_objs[:] = np.asarray(bo, dtype=np.float64)
+            best_rows[:] = np.asarray(br)
+
+    with tracer.span("anneal_search", "search", population=pop,
+                     steps=steps, island=island, seed=seed,
+                     backend=backend, devices=devices,
+                     objective=objective) as search_sp:
+        if precision == "x64":
+            with enable_x64():
+                call()
         else:
-            bo, br = run(tb, chain_idx, asg0_full, *args_tail)
-        best_objs[:] = np.asarray(bo, dtype=np.float64)
-        best_rows[:] = np.asarray(br)
-
-    if precision == "x64":
-        with enable_x64():
             call()
-    else:
-        call()
 
-    winner = int(np.argmin(best_objs))     # first min = lowest chain index
-    if not np.isfinite(best_objs[winner]):
-        raise RuntimeError(
-            "device search found no feasible schedule (every chain "
-            "error-poisoned); check the contention model coverage")
+        winner = int(np.argmin(best_objs))   # first min = lowest chain index
+        if not np.isfinite(best_objs[winner]):
+            raise RuntimeError(
+                "device search found no feasible schedule (every chain "
+                "error-poisoned); check the contention model coverage")
+        search_sp.set(evaluated=pop * (steps + 1), chain=winner,
+                      objective_value=float(best_objs[winner]))
     return SearchOutcome(
         assignment=tables.decode(best_rows[winner]),
         objective=float(best_objs[winner]),
@@ -840,7 +877,18 @@ def compile_seconds(
         fn.lower(tb, chain_idx, asg0, *args_tail).compile()
         return time.perf_counter() - t0
 
-    if precision == "x64":
-        with enable_x64():
-            return aot()
-    return aot()
+    with get_tracer().span("search.compile", "search",
+                           population=population, devices=devices or 1,
+                           backend=backend) as sp:
+        if precision == "x64":
+            with enable_x64():
+                dt = aot()
+        else:
+            dt = aot()
+        sp.set(compile_s=round(dt, 6))
+    # the gauge holds the most recent AOT measurement; bench_search reads
+    # it (min-of-repeats over its own calls) instead of re-wall-timing.
+    get_registry().gauge(
+        "search_compile_s",
+        "AOT lower+compile seconds of one search executable").set(dt)
+    return dt

@@ -25,12 +25,12 @@ same flag instead of appending a duplicate, and unrelated user-set
 """
 from __future__ import annotations
 
-import logging
 import os
 import sys
 from typing import Iterable, MutableMapping
 
-log = logging.getLogger("repro.core.xla_env")
+from ..obs import get_logger
+log = get_logger(__name__)
 
 HOST_DEVICE_FLAG = "--xla_force_host_platform_device_count"
 

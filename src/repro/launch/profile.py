@@ -168,6 +168,13 @@ def _solve_from_bundle(args, bundle, vsoc) -> int:
                        deadline_s=20.0, solver_knobs=knobs)
     print("solved from measured bundle:")
     print(plan.summary())
+    if args.trace_out:
+        from repro.obs import timeline
+        print(timeline.plan_ascii(plan))
+        path = timeline.write_chrome(timeline.plan_chrome(plan),
+                                     args.trace_out)
+        print(f"timeline: schedule gantt -> {path} "
+              f"(open at https://ui.perfetto.dev)")
     if vsoc is not None:
         from repro.core import Scheduler
         truth_model = next(iter(vsoc.models.values()))
@@ -248,7 +255,27 @@ def main(argv=None) -> int:
                          "steps auto-tune from the bundle-measured search "
                          "throughput (recorded in provenance as "
                          "search_cands_per_s); requires --solver anneal")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="with --solve: write the solved schedule as a "
+                         "per-accelerator Gantt in Chrome-trace/Perfetto "
+                         "JSON (contention intervals and transitions "
+                         "annotated) and print its ASCII rendering; open "
+                         "at https://ui.perfetto.dev")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a JSON snapshot of the metrics registry "
+                         "(solver counters, search_compile_s, ...) to PATH")
+    ap.add_argument("--log-level", default="info",
+                    choices=("debug", "info", "warning", "error"))
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit one JSON object per log line instead of "
+                         "plain text")
     args = ap.parse_args(argv)
+
+    from repro.obs import configure_logging
+    configure_logging(args.log_level, json=args.log_json)
+    if args.trace_out and not args.solve:
+        ap.error("--trace-out renders the solved schedule; it requires "
+                 "--solve")
 
     if (args.devices or args.search_budget_ms) and args.solver != "anneal":
         ap.error("--devices/--search-budget-ms tune the device-resident "
@@ -280,9 +307,14 @@ def main(argv=None) -> int:
     print(f"bundle {bundle.bundle_hash()[:12]} saved to {path} "
           f"(round-trip verified)")
 
+    rc = 0
     if args.solve:
-        return _solve_from_bundle(args, bundle, vsoc)
-    return 0
+        rc = _solve_from_bundle(args, bundle, vsoc)
+    if args.metrics_out:
+        from repro.obs import get_registry
+        get_registry().write(args.metrics_out)
+        print(f"metrics: registry snapshot -> {args.metrics_out}")
+    return rc
 
 
 if __name__ == "__main__":

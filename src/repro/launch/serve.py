@@ -39,6 +39,33 @@ from repro.models import build
 from repro.serve.engine import ServingEngine
 
 
+def _with_obs(args, run) -> int:
+    """Run one serving mode under the requested observability outputs.
+
+    ``--trace-out`` installs a process-wide :class:`repro.obs.Tracer`
+    before the run (solver spans, cache hits, gateway/fleet instants all
+    land on it) and writes the Perfetto JSON afterwards — even when the
+    run exits nonzero, so a failed boot still leaves its trace behind.
+    ``--metrics-out`` snapshots the metrics registry the same way.
+    """
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer, set_tracer
+        tracer = Tracer()
+        set_tracer(tracer)
+    try:
+        return run(args)
+    finally:
+        if tracer is not None:
+            tracer.write(args.trace_out)
+            print(f"trace: {len(tracer.events())} events -> "
+                  f"{args.trace_out} (open at https://ui.perfetto.dev)")
+        if args.metrics_out:
+            from repro.obs import get_registry
+            get_registry().write(args.metrics_out)
+            print(f"metrics: registry snapshot -> {args.metrics_out}")
+
+
 def _solver_knobs(args) -> tuple:
     """--devices/--search-budget-ms as GatewayConfig.solver_knobs pairs."""
     knobs = {}
@@ -181,6 +208,9 @@ def _run_fleet(args) -> int:
                       capacity_hint=len(trace), recalibrator=recal)
     rep = gw.replay(trace)
     print(rep.summary())
+    exported = gw.export_trace()
+    if exported:
+        print(f"trace: {exported} per-request queue/service spans exported")
     if recal is not None:
         head = recal.bundle
         print(f"recalibration: {recal.refits} re-fit(s) published, lineage "
@@ -276,6 +306,20 @@ def main(argv=None):
                          "size, --devices, and measured search throughput "
                          "instead of fixed defaults; requires --solver "
                          "anneal")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(solver spans, plan-cache hits, fleet "
+                         "queue/service spans, reschedule/throttle/"
+                         "recalibration instants) to PATH; open at "
+                         "https://ui.perfetto.dev")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a JSON snapshot of the metrics registry "
+                         "(counters/gauges/histograms) to PATH")
+    ap.add_argument("--log-level", default="info",
+                    choices=("debug", "info", "warning", "error"))
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit one JSON object per log line instead of "
+                         "plain text")
     ap.add_argument("--evaluator", default="auto", metavar="NAME",
                     help="candidate-schedule evaluator for any fresh solve: "
                          "a registered evaluator name (batch = vectorized "
@@ -284,6 +328,9 @@ def main(argv=None):
                          "auto = best available, currently batch). Unknown "
                          "names fail listing the registered evaluators.")
     args = ap.parse_args(argv)
+
+    from repro.obs import configure_logging
+    configure_logging(args.log_level, json=args.log_json)
 
     if (args.devices or args.search_budget_ms) and args.solver != "anneal":
         ap.error("--devices/--search-budget-ms tune the device-resident "
@@ -329,7 +376,7 @@ def main(argv=None):
         if args.recalibrate and not args.profile_bundle:
             ap.error("--recalibrate requires --profile-bundle (the offline "
                      "seed of the lineage chain)")
-        return _run_fleet(args)
+        return _with_obs(args, _run_fleet)
     for flag in ("trace", "cache_root", "recalibrate", "throttle"):
         if getattr(args, flag):
             ap.error(f"--{flag.replace('_', '-')} requires --fleet")
@@ -347,16 +394,24 @@ def main(argv=None):
         for a in (args.arch, args.co_arch):
             if not configs.get(a).has_decode:
                 ap.error(f"{a} is encoder-only: no decode service")
-        return _run_gateway(args)
+        return _with_obs(args, _run_gateway)
 
     if args.co_arch:
-        from repro.serve.concurrent import plan_concurrent_serving
-        plan = plan_concurrent_serving(
-            [configs.get(args.arch), configs.get(args.co_arch)],
-            [args.shape, args.shape], objective="latency", deadline_s=20.0)
-        print(plan.summary())
-        return 0
+        return _with_obs(args, _run_concurrent)
 
+    return _with_obs(args, _run_single)
+
+
+def _run_concurrent(args) -> int:
+    from repro.serve.concurrent import plan_concurrent_serving
+    plan = plan_concurrent_serving(
+        [configs.get(args.arch), configs.get(args.co_arch)],
+        [args.shape, args.shape], objective="latency", deadline_s=20.0)
+    print(plan.summary())
+    return 0
+
+
+def _run_single(args) -> int:
     cfg = configs.get(args.arch).reduced()
     if not cfg.has_decode:
         print(f"{args.arch} is encoder-only: no decode service")

@@ -35,6 +35,7 @@ from dataclasses import dataclass, field
 from typing import Sequence
 
 from ..core.contention import PiecewiseModel
+from ..obs import get_registry, get_tracer
 from .bundle import ProfileBundle
 from .calibrate import CalibrationResult, fit_piecewise, fit_proportional
 from .harness import Sample
@@ -206,7 +207,22 @@ class StreamingRecalibrator:
         """Re-fit + publish if enough new evidence accumulated, else None."""
         if not self.ready():
             return None
-        return self.publish(self.refit())
+        parent_hash = self.bundle.bundle_hash()
+        with get_tracer().span("recalibrate.refit", "recalibrate",
+                               kind=self._kind, window=len(self._window),
+                               parent=parent_hash[:12]) as sp:
+            child = self.publish(self.refit())
+            ev = self.events[-1]
+            sp.set(seq=ev.seq, bundle=ev.bundle_hash[:12],
+                   rmse=round(ev.rmse, 6),
+                   max_rel_err=round(ev.max_rel_err, 6))
+        reg = get_registry()
+        reg.counter("recalibrations",
+                    "streaming re-fit bundles published").inc()
+        reg.gauge("recalibrate_max_rel_err",
+                  "worst relative fit error of the latest published "
+                  "re-fit").set(ev.max_rel_err)
+        return child
 
     # -- audit -------------------------------------------------------------
     def max_rel_err_against(self, truth) -> float:

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.obs import TENANT_SCHEMA, conform
 
 
 @dataclasses.dataclass
@@ -44,9 +45,10 @@ class Request:
 #: ``ServingEngine.metrics()``, the per-tenant rows of
 #: ``MultiTenantGateway.metrics()`` and ``repro.serve.fleet`` reports all
 #: emit exactly this shape, so a multiplexer consumes one dict format
-#: regardless of which layer produced it.
-METRIC_KEYS = ("steps", "active", "queue_depth", "admitted", "completed",
-               "deferred", "tokens_out", "last_step_ms", "mean_step_ms")
+#: regardless of which layer produced it.  Derived from the registry
+#: schema in :mod:`repro.obs.metrics` — the schema is the single source
+#: of truth, this tuple is the backward-compatible view of it.
+METRIC_KEYS = tuple(TENANT_SCHEMA)
 
 
 @dataclasses.dataclass
@@ -109,9 +111,13 @@ class ServingEngine:
         return bool(self.queue) or self.active > 0
 
     def metrics(self) -> dict:
-        """Telemetry snapshot in the canonical :data:`METRIC_KEYS` shape."""
+        """Telemetry snapshot in the canonical :data:`METRIC_KEYS` shape.
+
+        Built through :func:`repro.obs.conform` so a missing canonical
+        key fails here, at the provider, not in a downstream consumer.
+        """
         c = self.counters
-        return {
+        return conform(TENANT_SCHEMA, {
             "steps": c.steps,
             "active": self.active,
             "queue_depth": len(self.queue),
@@ -121,7 +127,7 @@ class ServingEngine:
             "tokens_out": c.tokens_out,
             "last_step_ms": c.last_step_ms,
             "mean_step_ms": c.mean_step_ms,
-        }
+        })
 
     # ------------------------------------------------------------------
     def _admit(self):

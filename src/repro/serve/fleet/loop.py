@@ -69,10 +69,14 @@ from repro.core.dynamic import (ScaledContentionModel, SlowdownMonitor,
 from repro.core.scheduler import Scheduler
 from repro.core.simulate import simulate
 from repro.core.solver_bb import Solution
+from repro.obs import (GATEWAY_SCHEMA, TENANT_SCHEMA, conform, get_logger,
+                       get_tracer)
 from repro.serve.gateway import (GatewayConfig, GatewayPlan, TenantSpec,
                                  plan_gateway)
 from repro.serve.fleet.slo import SLO, AdmissionController, TenantThrottle
 from repro.serve.fleet.traffic import ArrivalTrace
+
+log = get_logger(__name__)
 
 if TYPE_CHECKING:  # pragma: no cover - annotation only (avoids jax import)
     from repro.profiling.online import StreamingRecalibrator
@@ -405,6 +409,9 @@ class FleetReport:
     throttle_events: list = field(default_factory=list)
     #: arrivals refused by the duty gate (status THROTTLED).
     throttled: int = 0
+    #: pool-plan names, index-aligned with the ``plan`` column (trace
+    #: export track labels); empty for pre-obs reports.
+    plan_names: tuple = ()
 
     # -- derived -----------------------------------------------------------
     @property
@@ -505,7 +512,7 @@ class FleetReport:
         steps = int(self.max_new[done].sum())
         svc = self.service_ms[done]
         per_step = (svc / self.max_new[done]) if len(svc) else np.array([])
-        return {
+        return conform(TENANT_SCHEMA, {
             "steps": steps,
             "active": int(running.sum()),
             "queue_depth": int(queued.sum()),
@@ -517,7 +524,70 @@ class FleetReport:
             "tokens_out": steps,
             "last_step_ms": float(per_step[-1]) if len(per_step) else 0.0,
             "mean_step_ms": float(per_step.mean()) if len(per_step) else 0.0,
-        }
+        })
+
+    # -- trace export ------------------------------------------------------
+    def trace_events(self, max_requests: int | None = 50_000,
+                     track_id: Callable[[str], int] | None = None
+                     ) -> list[dict]:
+        """Chrome trace events derived post hoc from the record arrays.
+
+        One queue span (arrival -> service start) and one service span
+        (start -> end) per completed request, on the owning pool plan's
+        track — derived in bulk from the flat NumPy columns, never
+        recorded live, so the replay hot loop stays untouched.
+
+        ``track_id`` maps a track name to a tid (pass
+        ``Tracer.track_id`` when ingesting via ``Tracer.add_events`` so
+        tids share the tracer's registry and its ``thread_name``
+        metadata covers them); without it the events are standalone and
+        carry their own metadata records.  At most ``max_requests``
+        requests are exported (``None`` = all); truncation is logged
+        and visible in the event count, never silent.
+        """
+        idx = np.flatnonzero(self.status == DONE)
+        total = len(idx)
+        if max_requests is not None and total > max_requests:
+            log.info("trace export truncated to the first %d of %d "
+                     "completed requests", max_requests, total)
+            idx = idx[:max_requests]
+        names = self.plan_names or tuple(
+            f"plan{p}" for p in range(int(self.plan.max(initial=-1)) + 1))
+        events: list[dict] = []
+        if track_id is None:
+            tids = {nm: 2 * p + 1 for p, nm in enumerate(names)}
+            tids.update({f"{nm}/queue": 2 * p + 2
+                         for p, nm in enumerate(names)})
+            events += [{"ph": "M", "name": "thread_name", "pid": 1,
+                        "tid": t, "args": {"name": nm}}
+                       for nm, t in tids.items()]
+            track_id = tids.__getitem__
+        svc_tid = [track_id(nm) for nm in names]
+        q_tid = [track_id(f"{nm}/queue") for nm in names]
+        plan = self.plan[idx]
+        tenant = self.tenant[idx]
+        cls = self.cls[idx]
+        ts_q = np.round(self.t_arrive[idx] * 1e3, 3)
+        start = self.t_start[idx]
+        dur_q = np.round((start - self.t_arrive[idx]) * 1e3, 3)
+        ts_s = np.round(start * 1e3, 3)
+        dur_s = np.round((self.t_end[idx] - start) * 1e3, 3)
+        cls_names = self.classes
+        for j in range(len(idx)):
+            p = int(plan[j])
+            name = cls_names[int(cls[j])] if cls_names else str(int(cls[j]))
+            t = int(tenant[j])
+            if dur_q[j] > 0.0:
+                events.append({
+                    "ph": "X", "name": f"queue:{name}", "cat": "queue",
+                    "ts": float(ts_q[j]), "dur": float(dur_q[j]),
+                    "pid": 1, "tid": q_tid[p], "args": {"tenant": t}})
+            events.append({
+                "ph": "X", "name": name, "cat": "service",
+                "ts": float(ts_s[j]), "dur": float(dur_s[j]),
+                "pid": 1, "tid": svc_tid[p],
+                "args": {"tenant": t, "wait_ms": float(dur_q[j])}})
+        return events
 
     def summary(self) -> str:
         slo = self.slo_report()
@@ -727,9 +797,16 @@ class FleetGateway:
             if action == "throttle":
                 self.controller.set_duty(tenant, self.cfg.throttle_duty)
                 self.throttle_events.append((end, tenant, action))
+                get_tracer().instant("fleet.throttle", "dynamic",
+                                     ts_ms=end, track="fleet",
+                                     tenant=tenant,
+                                     duty=self.cfg.throttle_duty)
             elif action == "release":
                 self.controller.set_duty(tenant, 1.0)
                 self.throttle_events.append((end, tenant, action))
+                get_tracer().instant("fleet.release", "dynamic",
+                                     ts_ms=end, track="fleet",
+                                     tenant=tenant)
         if self.monitors[p].observe(observed, floor):
             self._reschedule(p, end)
         # a freed slot (or KV budget) may unblock any plan's queue.
@@ -749,6 +826,10 @@ class FleetGateway:
                        if self.recalibrator.events else float("nan"))
                 self.recalibrations.append(
                     (t_ms, published.bundle_hash(), err))
+                get_tracer().instant(
+                    "fleet.recalibration", "recalibrate", ts_ms=t_ms,
+                    track="fleet", bundle=published.bundle_hash()[:12],
+                    max_rel_err=round(err, 6))
                 for other in self.pool:
                     other.adopt_model(published.model,
                                       objective=self.cfg.objective)
@@ -759,6 +840,9 @@ class FleetGateway:
             budget_s=self.cfg.reschedule_budget_s)
         self.reschedules.append(FleetRescheduleEvent(
             t_ms, pp.name, factor, old_obj, new_obj, changed))
+        get_tracer().instant("fleet.reschedule", "dynamic", ts_ms=t_ms,
+                             track="fleet", plan=pp.name, factor=factor,
+                             changed=changed)
         self.monitors[p].reset()
         # a changed assignment moves class demand; re-price the injected
         # antagonist through the oracle against the new placement.
@@ -804,6 +888,10 @@ class FleetGateway:
             if th.engage():
                 self.controller.set_duty(tenant, self.cfg.throttle_duty)
                 self.throttle_events.append((t_ms, tenant, "throttle"))
+                get_tracer().instant("fleet.throttle", "dynamic",
+                                     ts_ms=t_ms, track="fleet",
+                                     tenant=tenant,
+                                     duty=self.cfg.throttle_duty)
 
     # -- external contention (tests / benchmarks / replay harnesses) ------
     def set_contention(self, plan: int, factor: float) -> None:
@@ -869,16 +957,22 @@ class FleetGateway:
 
         e = 0
         t_arr, tenants, mnew = trace.t_ms, trace.tenant, trace.max_new
-        for k in range(len(trace)):
-            t = float(t_arr[k])
-            while e < len(events) and events[e][0] <= t:
-                fire(*events[e])
-                e += 1
-            self.submit(t, int(tenants[k]), int(mnew[k]))
-        for ev in events[e:]:
-            fire(*ev)
-        if drain:
-            self.drain()
+        with get_tracer().span("fleet.replay", "fleet",
+                               requests=len(trace),
+                               policy=self.cfg.policy) as sp:
+            for k in range(len(trace)):
+                t = float(t_arr[k])
+                while e < len(events) and events[e][0] <= t:
+                    fire(*events[e])
+                    e += 1
+                self.submit(t, int(tenants[k]), int(mnew[k]))
+            for ev in events[e:]:
+                fire(*ev)
+            if drain:
+                self.drain()
+            sp.set(reschedules=len(self.reschedules),
+                   recalibrations=len(self.recalibrations),
+                   shed=self.controller.shed)
         return self.report()
 
     def report(self) -> FleetReport:
@@ -898,21 +992,36 @@ class FleetGateway:
             default_slo=self.controller.default_slo,
             recalibrations=list(self.recalibrations),
             throttle_events=list(self.throttle_events),
-            throttled=self.controller.throttled)
+            throttled=self.controller.throttled,
+            plan_names=tuple(pp.name for pp in self.pool))
 
     def metrics(self) -> dict:
         """Live telemetry in the gateway's ``metrics()`` shape: per-tenant
         rows under ``"tenants"`` (canonical :data:`~repro.serve.engine.
         METRIC_KEYS`), fleet aggregates on top."""
         rep = self.report()
-        return {
+        return conform(GATEWAY_SCHEMA, {
             "steps": int(rep.max_new[rep.done_mask].sum()),
             "kv_bytes_in_use": self.controller.kv_bytes_in_use,
             "deferred_admissions": self.controller.deferred,
             "reschedules": len(self.reschedules),
-            "tenants": {int(t): rep.tenant_metrics(int(t))
-                        for t in np.unique(rep.tenant)},
-        }
+        }, tenants={int(t): rep.tenant_metrics(int(t))
+                    for t in np.unique(rep.tenant)})
+
+    def export_trace(self, tracer=None,
+                     max_requests: int | None = 50_000) -> int:
+        """Ingest the replay's derived per-request spans into ``tracer``
+        (default: the global tracer).  Returns the event count added.
+        The live replay recorded only rare instants (reschedule /
+        throttle / recalibration publish); this bulk pass adds the
+        per-plan queue/service spans from the record arrays."""
+        tracer = tracer or get_tracer()
+        if not tracer.enabled:
+            return 0
+        events = self.report().trace_events(max_requests=max_requests,
+                                            track_id=tracer.track_id)
+        tracer.add_events(events)
+        return len(events)
 
     # -- asyncio front-end -------------------------------------------------
     def _resolve_future(self, i: int) -> None:

@@ -45,6 +45,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping, Sequence
 
+from repro.obs import ADMISSION_SCHEMA, conform
+
 
 @dataclass(frozen=True)
 class SLO:
@@ -313,8 +315,11 @@ class AdmissionController:
 
     # -- telemetry ---------------------------------------------------------
     def metrics(self) -> dict:
-        return {"kv_bytes_in_use": self.kv_bytes_in_use,
-                "budget_bytes": self.budget_bytes,
-                "shed": self.shed, "deferred": self.deferred,
-                "throttled": self.throttled,
-                "duty": dict(self.duty)}
+        """Admission telemetry in the canonical
+        :data:`~repro.obs.ADMISSION_SCHEMA` shape."""
+        return conform(ADMISSION_SCHEMA, {
+            "kv_bytes_in_use": self.kv_bytes_in_use,
+            "budget_bytes": self.budget_bytes,
+            "shed": self.shed, "deferred": self.deferred,
+            "throttled": self.throttled,
+            "duty": dict(self.duty)})

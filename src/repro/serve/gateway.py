@@ -51,6 +51,7 @@ from repro.core.simulate import SimResult, Workload, simulate
 from repro.core.solver_bb import Solution
 from repro.models import build
 from repro.models.graph_export import export_graph
+from repro.obs import GATEWAY_SCHEMA, conform, get_registry, get_tracer
 from repro.serve.engine import Request, ServingEngine
 
 _DTYPE_BYTES = {"int8": 1, "float16": 2, "bfloat16": 2, "float32": 4}
@@ -400,13 +401,12 @@ class MultiTenantGateway:
         gateway-level aggregates — the same format the fleet loop
         (:mod:`repro.serve.fleet`) consumes and re-emits."""
         tenants = {n: e.metrics() for n, e in self.engines.items()}
-        return {
+        return conform(GATEWAY_SCHEMA, {
             "steps": self.total_steps,
             "kv_bytes_in_use": self.kv_bytes_in_use,
             "deferred_admissions": self.deferred_admissions,
             "reschedules": len(self.reschedules),
-            "tenants": tenants,
-        }
+        }, tenants=tenants)
 
     # ---- dynamic loop -------------------------------------------------
     def _reschedule(self, tenants: tuple[str, ...]) -> bool:
@@ -449,6 +449,14 @@ class MultiTenantGateway:
         self.reschedules.append(RescheduleEvent(
             self.total_steps, tenants, factor, cur_obj, new.objective,
             changed))
+        get_tracer().instant("gateway.reschedule", "dynamic",
+                             step=self.total_steps,
+                             tenants=",".join(tenants), factor=factor,
+                             changed=changed)
+        get_registry().counter(
+            "gateway_reschedules",
+            "§4.4 slowdown-triggered re-schedules").labels(
+                changed=str(changed).lower()).inc()
         self.plan = dataclasses.replace(self.plan, solution=new, plan=art)
         for n in tenants:
             self.monitors[n].reset()
